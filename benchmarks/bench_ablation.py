@@ -1,0 +1,53 @@
+"""Paper Fig. 19 ablation: T1 (predictor everywhere) → +T2 (two-level
+scheduling) → +T3 (tree speculative decoding with hyper-token mapping)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, get_bundle, token_batches, decode_run
+from repro.core import engine as eng
+from repro.core.tree import TreeSpec
+
+
+def run(timer: Timer) -> None:
+    b = get_bundle()
+    prompts = token_batches(b.run, 1, B=1, S=16, seed=31)[0]
+    new = 24
+    dense = decode_run(b, "dense", prompts, new_tokens=new)
+    t1 = decode_run(b, "specee_t1", prompts, new_tokens=new)
+    t12 = decode_run(b, "specee", prompts, new_tokens=new)
+    timer.add("ablation/dense", dense["seconds"] / new * 1e6, "1.00x")
+    timer.add("ablation/T1", t1["seconds"] / new * 1e6,
+              f"{dense['seconds']/t1['seconds']:.2f}x "
+              f"avg_units={t1['avg_units']:.2f}")
+    timer.add("ablation/T1+T2", t12["seconds"] / new * 1e6,
+              f"{dense['seconds']/t12['seconds']:.2f}x "
+              f"avg_units={t12['avg_units']:.2f}")
+
+    # + T3: tree speculative decoding (tokens per TLM forward > 1)
+    tree = TreeSpec(depth=2, branch=3)
+    m, params, sw = b.model, b.params, b.sw
+    first, st = eng.init_tree_decode_state(m, params, sw,
+                                           {"tokens": prompts}, 64, tree)
+    step = jax.jit(lambda p, s, stt: eng.tree_decode_step(m, p, s, stt, tree))
+    step(params, sw, st)  # compile
+    emitted, ticks = 1, 0
+    t0 = time.perf_counter()
+    while emitted < new + 1 and ticks < 4 * new:
+        out, n, st, info = step(params, sw, st)
+        emitted += int(jnp.sum(n))
+        ticks += 1
+    dt = time.perf_counter() - t0
+    timer.add("ablation/T1+T2+T3", dt / max(emitted - 1, 1) * 1e6,
+              f"{dense['seconds']/new/(dt/max(emitted-1,1)):.2f}x "
+              f"tokens_per_forward={(emitted-1)/max(ticks,1):.2f}")
+
+
+if __name__ == "__main__":
+    t = Timer()
+    run(t)
+    t.emit()

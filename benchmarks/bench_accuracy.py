@@ -1,0 +1,27 @@
+"""Paper Table 4 analogue: accuracy (greedy agreement vs the dense model —
+the verification guarantee) and average forward layers per dataset-like
+synthetic stream."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, get_bundle, token_batches, decode_run
+
+
+def run(timer: Timer) -> None:
+    b = get_bundle()
+    E = b.model.num_exit_points
+    for name, seed in (("synthA", 21), ("synthB", 22), ("synthC", 23)):
+        prompts = token_batches(b.run, 1, B=2, S=12, seed=seed)[0]
+        dense = decode_run(b, "dense", prompts, new_tokens=16)
+        spec = decode_run(b, "specee", prompts, new_tokens=16)
+        agree = float(np.mean(dense["tokens"] == spec["tokens"]))
+        timer.add(f"accuracy/{name}", 0.0,
+                  f"agree={agree:.3f} avg_layers={spec['avg_exit']:.2f}/{E} "
+                  f"dense_layers={E}")
+
+
+if __name__ == "__main__":
+    t = Timer()
+    run(t)
+    t.emit()

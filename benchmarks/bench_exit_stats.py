@@ -1,0 +1,45 @@
+"""Paper Fig. 10/11: exit-layer distribution (skew) and context similarity
+(hit ratio of the current exit within ±2 of the last N exits)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, get_bundle, token_batches, decode_run
+
+
+def run(timer: Timer) -> None:
+    b = get_bundle()
+    E = b.model.num_exit_points
+    prompts = token_batches(b.run, 1, B=4, S=16, seed=41)[0]
+    spec = decode_run(b, "specee_t1", prompts, new_tokens=24, threshold=0.35)
+    exits = np.minimum(spec["exit_points"], E)      # (steps, B)
+    hist = np.bincount(exits.flatten(), minlength=E + 1)
+    timer.add("exit_stats/histogram", 0.0,
+              "counts=" + "/".join(str(int(x)) for x in hist))
+    # skew: bottom-50% layers' share of exits (paper: <20%)
+    h = hist[:E].astype(float)
+    if h.sum() > 0:
+        order = np.sort(h)
+        bottom = order[: E // 2].sum() / max(h.sum(), 1)
+        timer.add("exit_stats/bottom50_share", 0.0, f"{bottom:.2f}")
+    # context similarity: exit within ±2 of one of the previous N exits
+    for N in (1, 3, 5):
+        hits, total = 0, 0
+        for bb in range(exits.shape[1]):
+            seq = exits[:, bb]
+            for t in range(N, len(seq)):
+                if seq[t] >= E:   # no exit
+                    continue
+                total += 1
+                if any(abs(int(seq[t]) - int(s)) <= 2
+                       for s in seq[t - N:t] if s < E):
+                    hits += 1
+        ratio = hits / total if total else 0.0
+        timer.add(f"exit_stats/ctx_similarity_N{N}", 0.0,
+                  f"hit={ratio:.2f} n={total}")
+
+
+if __name__ == "__main__":
+    t = Timer()
+    run(t)
+    t.emit()

@@ -1,0 +1,47 @@
+"""Paper Fig. 17 + §7.4.2: memory accounting — target model vs +DLM vs
++predictors (measured byte counts, full-scale analytic for Llama2-7B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, get_bundle
+from repro.configs import get_config
+from repro.core import draft as draft_lib
+from repro.core import predictor as pred_lib
+
+
+def _bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def run(timer: Timer) -> None:
+    b = get_bundle()
+    target = _bytes(b.params)
+    draft = _bytes(b.sw.draft)
+    preds = _bytes(b.sw.predictors)
+    timer.add("memory/smoke_target", 0.0, f"{target/2**20:.2f}MiB")
+    timer.add("memory/smoke_draft", 0.0,
+              f"{draft/2**20:.2f}MiB ({draft/target:.1%} of target)")
+    timer.add("memory/smoke_predictors", 0.0,
+              f"{preds/2**10:.1f}KiB ({preds/target:.2%} of target)")
+
+    # full-scale analytic (Llama2-7B, paper's numbers: DLM ≈ 0.9 GB bf16,
+    # predictors ≈ 416 KB fp16)
+    full = get_config("llama2-7b")
+    n_t = full.model.param_count()
+    n_d = draft_lib.draft_param_count(full.model)
+    p_b = pred_lib.predictor_param_bytes(full.specee, full.model.num_layers)
+    timer.add("memory/llama7b_target", 0.0, f"{n_t*2/2**30:.2f}GiB bf16")
+    timer.add("memory/llama7b_draft", 0.0,
+              f"{n_d*2/2**30:.2f}GiB bf16 ({n_d/n_t:.1%} of params — paper: "
+              f"~0.9GB extra)")
+    timer.add("memory/llama7b_predictors", 0.0,
+              f"{p_b/2**10:.0f}KiB fp32 (paper: 416KiB fp16)")
+
+
+if __name__ == "__main__":
+    t = Timer()
+    run(t)
+    t.emit()

@@ -1,0 +1,76 @@
+"""Paper §7.4.4 + Fig. 8: predictor runtime overhead and design-space
+exploration (layers × hidden), plus Fig. 18 (training-data fraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, get_bundle, token_batches
+from repro.config import SpecEEConfig
+from repro.core import predictor as pred_lib
+from repro.core import predictor_training as pt
+
+
+def _time(fn, *args, iters: int = 50) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(timer: Timer) -> None:
+    b = get_bundle()
+    m, params, sw = b.model, b.params, b.sw
+    spec = b.run.specee
+    B = 8
+    feats = jax.random.normal(jax.random.PRNGKey(0),
+                              (B, spec.feature_dim()))
+
+    # predictor runtime vs one decoder unit runtime (paper: 5.6% of token)
+    pp = pred_lib.predictor_at(sw.predictors, jnp.int32(0))
+    t_pred = _time(jax.jit(lambda f: pred_lib.apply_predictor(pp, f)), feats)
+    cache = m.empty_cache(B, 32)
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, b.run.model.d_model))
+    t_unit = _time(jax.jit(
+        lambda hh: m.run_unit(params, 0, jnp.int32(0), hh,
+                              cache["segments"][0], cache["len"])[0]), h)
+    timer.add("predictor/runtime", t_pred * 1e6,
+              f"unit={t_unit*1e6:.0f}us ratio={t_pred/t_unit:.3f}")
+
+    # Fig. 8 DSE: layers × hidden
+    batches = token_batches(b.run, 2)
+    data = pt.collect_dataset(m, params, sw.draft, batches)
+    for layers in (1, 2, 3):
+        for hidden in (128, 512, 1024):
+            s = SpecEEConfig(predictor_layers=layers, predictor_hidden=hidden)
+            p, met = pt.train_predictors(s, data, jax.random.PRNGKey(3),
+                                         steps=150)
+            one = pred_lib.predictor_at(p, jnp.int32(0))
+            t = _time(jax.jit(
+                lambda f: pred_lib.apply_predictor(one, f)), feats, iters=20)
+            timer.add(f"predictor/dse_L{layers}_H{hidden}", t * 1e6,
+                      f"acc={met['accuracy']:.3f}")
+
+    # Fig. 18: training-data fraction vs accuracy
+    E, T, F = data.features.shape
+    for frac in (0.02, 0.1, 0.5, 1.0):
+        n = max(8, int(T * frac))
+        sub = pt.FeatureDataset(features=data.features[:, :n],
+                                labels=data.labels[:, :n])
+        _, met = pt.train_predictors(b.run.specee, sub,
+                                     jax.random.PRNGKey(4), steps=150)
+        timer.add(f"predictor/data_frac_{frac}", 0.0,
+                  f"acc={met['accuracy']:.3f} n={n}")
+
+
+if __name__ == "__main__":
+    t = Timer()
+    run(t)
+    t.emit()

@@ -1,0 +1,39 @@
+"""Paper Fig. 14 analogue: decoding speedup & throughput, dense vs SpecEE.
+
+CPU smoke-scale measurement of the real engines (batch 1 = the paper's
+latency scenario; batch 2 = slot-parallel), plus the paper's own speedup
+model: E / (avg_exit + draft_overhead_layers) using measured exits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, get_bundle, token_batches, decode_run
+
+
+def run(timer: Timer) -> None:
+    b = get_bundle()
+    E = b.model.num_exit_points
+    prompts = token_batches(b.run, 1, B=1, S=16, seed=11)[0]
+    dense = decode_run(b, "dense", prompts, new_tokens=24)
+    spec = decode_run(b, "specee", prompts, new_tokens=24)
+    speedup = dense["seconds"] / spec["seconds"]
+    # the paper's theoretical model (§5.1): layers / (avg exit + 1 draft-layer)
+    theo = E / (spec["avg_exit"] + 1.0)
+    timer.add("speedup/dense_tok_s", 1e6 / dense["tok_per_s"],
+              f"tok/s={dense['tok_per_s']:.2f}")
+    timer.add("speedup/specee_tok_s", 1e6 / spec["tok_per_s"],
+              f"tok/s={spec['tok_per_s']:.2f}")
+    timer.add("speedup/end_to_end", spec["seconds"] / 24 * 1e6,
+              f"speedup={speedup:.2f}x avg_exit={spec['avg_exit']:.2f}/{E} "
+              f"theoretical={theo:.2f}x "
+              f"draft_topk_hit={b.draft_metrics['topk_hit_rate']:.2f}")
+    # greedy-agreement between the two engines (accuracy guard, Table 4)
+    agree = float(np.mean(dense["tokens"] == spec["tokens"]))
+    timer.add("speedup/greedy_agreement", 0.0, f"agree={agree:.3f}")
+
+
+if __name__ == "__main__":
+    t = Timer()
+    run(t)
+    t.emit()

@@ -1,0 +1,137 @@
+"""Shared benchmark harness: a smoke-scale Llama2-7B with a TRAINED draft and
+TRAINED predictors — the full SpecEE pipeline end-to-end on CPU.
+
+``get_bundle()`` memoizes the trained system so every benchmark reuses it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import draft_training, engine as eng, predictor_training as pt
+from repro.core import scheduler as sched_lib
+from repro.data import DataPipeline
+from repro.models.model import Model, build_model
+from repro.train import TrainLoop
+
+
+@dataclass
+class Bundle:
+    run: Any
+    model: Model
+    params: Any
+    sw: eng.SpecEEWeights
+    draft_metrics: Dict[str, float]
+    predictor_metrics: Dict[str, float]
+    offline_counts: np.ndarray
+
+
+_BUNDLE: Optional[Bundle] = None
+
+
+def token_batches(run, n: int, B: int = 4, S: int = 32, seed: int = 0):
+    pipe = DataPipeline(run.model, B, S, seed=seed)
+    return [jnp.asarray(pipe.next()["tokens"]) for _ in range(n)]
+
+
+def get_bundle(arch: str = "llama2-7b", train_steps: int = 30,
+               draft_steps: int = 250, pred_steps: int = 300,
+               layers: int = 12) -> Bundle:
+    global _BUNDLE
+    if _BUNDLE is not None:
+        return _BUNDLE
+    run = get_config(arch).smoke()
+    # deepen the smoke stack: exit dynamics need headroom (the paper's home
+    # regime is 32 layers; 12 keeps CPU benches fast but non-trivial)
+    run = dataclasses.replace(
+        run, model=dataclasses.replace(run.model, num_layers=layers))
+    model = build_model(run)
+    params = model.init(jax.random.PRNGKey(0))
+    # 1. briefly train the TARGET so hidden dynamics are non-degenerate
+    loop = TrainLoop(model, run, params)
+    loop.run_steps(train_steps)
+    params = loop.params
+    # 2. train the DLM against the frozen target (paper §7.4.3)
+    batches = token_batches(run, 8)
+    draft, dmetrics = draft_training.train_draft(
+        model, params, batches, jax.random.PRNGKey(1), steps=draft_steps)
+    # 3. collect features + train predictors (paper §7.4.4)
+    data = pt.collect_dataset(model, params, draft, batches[:4])
+    predictors, pmetrics = pt.train_predictors(
+        run.specee, data, jax.random.PRNGKey(2), steps=pred_steps)
+    sw = eng.SpecEEWeights(
+        draft=draft, predictors=predictors,
+        offline_mask=jnp.ones((model.num_exit_points,), bool))
+    # 4. offline exit statistics -> T2 offline schedule (paper §5.3)
+    counts = pt.offline_exit_counts(model, params, sw, batches[:1],
+                                    max_new=12)
+    offline = sched_lib.offline_mask_from_counts(
+        jnp.asarray(counts[:-1], jnp.float32), run.specee)
+    sw = sw._replace(offline_mask=offline)
+    _BUNDLE = Bundle(run=run, model=model, params=params, sw=sw,
+                     draft_metrics=dmetrics, predictor_metrics=pmetrics,
+                     offline_counts=counts)
+    return _BUNDLE
+
+
+def decode_run(bundle: Bundle, mode: str, prompts: jnp.ndarray,
+               new_tokens: int = 24, threshold: Optional[float] = None
+               ) -> Dict[str, Any]:
+    """Greedy-decode ``new_tokens`` for each prompt row.
+
+    mode: "dense" | "specee" | "specee_t1" (no scheduling).
+    Returns tokens, wall time, avg units executed, exit histogram."""
+    import dataclasses
+    run, m, params, sw = bundle.run, bundle.model, bundle.params, bundle.sw
+    if mode == "specee_t1":
+        run = dataclasses.replace(
+            run, specee=dataclasses.replace(run.specee,
+                                            schedule_enabled=False))
+        m = build_model(run, m.flags)
+    B, T = prompts.shape
+    max_seq = T + new_tokens + 2
+    first, st = eng.init_decode_state(m, params, sw, {"tokens": prompts},
+                                      max_seq)
+    step = jax.jit(lambda p, s, stt: (
+        eng.dense_decode_step(m, p, s, stt) if mode == "dense"
+        else eng.ar_decode_step(m, p, s, stt, threshold=threshold)))
+    # warmup (compile)
+    step(params, sw, st)
+    toks, units, exits = [first], [], []
+    t0 = time.perf_counter()
+    for _ in range(new_tokens):
+        tok, st, info = step(params, sw, st)
+        toks.append(tok)
+        units.append(info.units_run)
+        exits.append(info.exit_point)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    units = np.asarray(jax.device_get(units))
+    exits = np.asarray(jax.device_get(exits))
+    return {
+        "tokens": np.asarray(jnp.stack(toks, 1)),
+        "seconds": dt,
+        "tok_per_s": B * new_tokens / dt,
+        "avg_units": float(np.mean(units)),
+        "exit_points": exits,
+        "avg_exit": float(np.mean(np.minimum(exits, m.num_exit_points))),
+    }
+
+
+class Timer:
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")

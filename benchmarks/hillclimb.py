@@ -1,0 +1,111 @@
+"""§Perf hillclimb driver: lower each selected cell under baseline and
+candidate-optimization flags, and report the roofline-term deltas.
+
+    REPRO_DRYRUN_DEVICES=256 PYTHONPATH=src python -m benchmarks.hillclimb \
+        --cell deepseek-decode --out artifacts/hillclimb_deepseek.json
+
+Cells and candidate ladders are defined in CELLS below; every variant is a
+full ``.lower().compile()`` against the production mesh (same artifact class
+as the dry-run), so before/after numbers are measured, not estimated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.models.model import ModelFlags
+
+
+def base_flags(kind: str, d_model: int, multi_pod: bool = False,
+               **over) -> ModelFlags:
+    kw = dict(
+        remat="full" if kind == "train" else "none",
+        act_batch_axes=("pod", "data") if multi_pod else "data",
+        act_batch_extent=32 if multi_pod else 16,
+        chunk_size=256 if d_model >= 8192 else 512,
+        ce_chunk=256 if d_model >= 8192 else 512)
+    kw.update(over)
+    return ModelFlags(**kw)
+
+
+# cell id -> (arch, shape, [(variant_name, kind, flag_overrides, extra)])
+CELLS: Dict[str, Tuple[str, str, List]] = {
+    "deepseek-decode": ("deepseek-7b", "decode_32k", [
+        ("baseline_dense", dict(dense_decode=True), {}),
+        ("specee_paper", dict(), {}),                       # paper-faithful
+        ("specee_int8kv", dict(), {"kv_quant": True}),      # beyond-paper
+    ]),
+    "qwen3-train": ("qwen3-moe-235b-a22b", "train_4k", [
+        ("baseline", dict(), {}),
+        ("ep_int8_dispatch", dict(), {"moe_ep_quant": True}),
+        ("ep_int8_bf16reduce", dict(), {"moe_ep_quant": True,
+                                        "moe_bf16_reduce": True}),
+        ("all_levers_seqshard", dict(), {"moe_ep_quant": True,
+                                         "moe_bf16_reduce": True,
+                                         "act_seq_shard": True}),
+        ("ep_int8_pinfull", dict(), {"moe_ep_quant": True,
+                                     "act_pin_full": True}),
+    ]),
+    "commandr-prefill": ("command-r-plus-104b", "prefill_32k", [
+        ("baseline", dict(), {}),
+        ("attn_prune", dict(), {"attn_prune": True}),
+        ("seq_shard", dict(), {"act_seq_shard": True}),
+        ("pin_full", dict(), {"act_pin_full": True}),
+        ("pin_full_bf16ar", dict(), {"act_pin_full": True,
+                                     "matmul_bf16_reduce": True}),
+        ("best_combo", dict(), {"act_pin_full": True,
+                                "matmul_bf16_reduce": True,
+                                "attn_prune": True}),
+    ]),
+}
+
+
+def run_variants(cell_id: str, multi_pod: bool = False) -> List[Dict[str, Any]]:
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+    from benchmarks.roofline import roofline_terms
+    arch, shape, variants = CELLS[cell_id]
+    d_model = get_config(arch).model.d_model
+    kind = "train" if shape.startswith("train") else (
+        "decode" if "decode" in shape or shape.startswith("long") else
+        "prefill")
+    out = []
+    for name, runkw, flagkw in variants:
+        flags = base_flags(kind, d_model, multi_pod, **flagkw)
+        print(f"=== {cell_id} / {name} ===", flush=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod, flags=flags, **runkw)
+            rec["variant"] = name
+            rec["roofline"] = roofline_terms(rec)
+            c = rec.get("collectives_exact", {})
+            print(json.dumps({
+                "temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0)
+                / 2**30,
+                "args_gb": rec.get("analytic_arg_bytes_per_device", 0) / 2**30,
+                "collective_gb": c.get("total_bytes", 0) / 2**30,
+                "compile_s": rec.get("compile_s"),
+            }), flush=True)
+        except Exception as e:
+            rec = {"variant": name, "arch": arch, "shape": shape,
+                   "error": repr(e)}
+            print("FAILED:", repr(e), flush=True)
+        out.append(rec)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = run_variants(args.cell, args.multi_pod)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=1, default=str)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

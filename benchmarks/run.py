@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (deliverable d). All benchmarks run
+the REAL engines on a smoke-scale Llama2-7B with a trained draft + trained
+predictors (see benchmarks/common.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--only speedup,ablation]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import Timer, get_bundle
+
+MODULES = [
+    ("speedup", "benchmarks.bench_speedup"),        # paper Fig. 14
+    ("accuracy", "benchmarks.bench_accuracy"),      # paper Table 4
+    ("ablation", "benchmarks.bench_ablation"),      # paper Fig. 19
+    ("predictor", "benchmarks.bench_predictor"),    # paper §7.4.4 / Fig. 8/18
+    ("exit_stats", "benchmarks.bench_exit_stats"),  # paper Fig. 10/11
+    ("memory", "benchmarks.bench_memory"),          # paper Fig. 17 / §7.4.2
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("# building trained SpecEE bundle (target+draft+predictors)...",
+          file=sys.stderr)
+    t0 = time.time()
+    b = get_bundle()
+    print(f"# bundle ready in {time.time()-t0:.0f}s: "
+          f"draft_topk_hit={b.draft_metrics['topk_hit_rate']:.2f} "
+          f"predictor_acc={b.predictor_metrics['accuracy']:.2f}",
+          file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        timer = Timer()
+        try:
+            __import__(mod, fromlist=["run"]).run(timer)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            timer.add(f"{name}/ERROR", 0.0, "exception")
+        timer.emit()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: build a model, run SpecEE decoding, inspect exits.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch llama2-7b]
+
+Uses the smoke-scale config so it runs on a laptop CPU in seconds; every
+line is the same public API a full-scale deployment uses.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import engine as eng
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    # 1. config + model (smoke-scale: same family, laptop-sized)
+    run = get_config(args.arch).smoke()
+    model = build_model(run)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{args.arch} (smoke): {model.num_exit_points} exit points, "
+          f"segments={model.segments}")
+
+    # 2. SpecEE weights: draft (DLM) + per-exit-point predictors + schedule
+    sw = eng.init_specee(model, jax.random.PRNGKey(1))
+
+    # 3. prefill a prompt, then decode with speculative early exiting
+    prompt = jnp.arange(12)[None, :] % run.model.vocab_size
+    first, state = eng.init_decode_state(model, params, sw,
+                                         {"tokens": prompt},
+                                         max_seq=64)
+    tokens = [int(first[0])]
+    for _ in range(args.new_tokens):
+        tok, state, info = eng.ar_decode_step(model, params, sw, state)
+        tokens.append(int(tok[0]))
+        print(f"  token={int(tok[0]):6d} exit_point="
+              f"{int(info.exit_point[0])}/{model.num_exit_points} "
+              f"exited={bool(info.exited[0])} "
+              f"units_run={int(info.units_run)}")
+    print("generated:", tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving driver (deliverable b): continuous-batching engine with SpecEE.
+
+Trains the full SpecEE stack (draft + predictors + offline schedule) on a
+smoke model, then serves a stream of batched requests and reports per-request
+exit statistics and the dense-vs-SpecEE throughput delta.
+
+    PYTHONPATH=src python examples/serve_specee.py --requests 6
+"""
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import get_bundle
+from repro.serving import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    print("training SpecEE bundle (target + draft + predictors)...")
+    b = get_bundle()
+    print(f"  draft top-k hit rate: {b.draft_metrics['topk_hit_rate']:.2f}")
+    print(f"  predictor accuracy:   {b.predictor_metrics['accuracy']:.2f}")
+
+    # prompts drawn from the training distribution (the predictors/draft were
+    # trained on it — uniform-random tokens would never trigger exits)
+    from benchmarks.common import token_batches
+    rng = np.random.default_rng(0)
+    pool = np.asarray(token_batches(b.run, 2, B=4, S=24, seed=77)[0])
+    prompts = [pool[i % pool.shape[0], :int(rng.integers(6, 20))]
+               for i in range(args.requests)]
+
+    results = {}
+    for mode in ("specee", "dense"):
+        se = ServingEngine(b.model, b.params, b.sw, specee=mode == "specee")
+        reqs = [se.submit(p, max_new_tokens=args.max_new) for p in prompts]
+        t0 = time.perf_counter()
+        se.run_to_completion()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in reqs)
+        results[mode] = (dt, toks)
+        print(f"\n[{mode}] {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s)")
+        for r in reqs[:3]:
+            exits = [e for e in r.exit_points
+                     if e < b.model.num_exit_points]
+            print(f"  req {r.uid}: {len(r.output)} tokens, "
+                  f"{len(exits)}/{len(r.exit_points)} early exits, "
+                  f"avg exit layer "
+                  f"{np.mean(exits) if exits else float('nan'):.1f}")
+    sp = results["dense"][0] / results["specee"][0]
+    print(f"\nSpecEE-vs-dense wall clock through the serving engine: {sp:.2f}x"
+          f"\n(NOTE: this demo measures the CONTINUOUS-BATCHING wrapper on "
+          f"CPU, whose per-tick host overhead dwarfs the tiny smoke model; "
+          f"the engine-level speedup measurement is benchmarks/bench_speedup "
+          f"— 1.7–1.9x at smoke scale. The numbers to read here are the "
+          f"early-exit counts and layers above.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end driver (deliverable b): train a ~smoke model for a few hundred
+steps with the full production loop — data pipeline, AdamW + schedule,
+checkpointing, restart, straggler monitor.
+
+    PYTHONPATH=src python examples/train_small.py --arch minicpm-2b \
+        --steps 200 --ckpt /tmp/repro_ckpt
+
+Kill it mid-run and rerun the same command: it restores the latest
+checkpoint and the loss curve continues exactly where it stopped.
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.train import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")  # WSD schedule showcase
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    import dataclasses
+    run = get_config(args.arch).smoke()
+    # schedule horizon = the requested step count (smoke default is 2)
+    run = dataclasses.replace(
+        run, train=dataclasses.replace(run.train, steps=args.steps))
+    model = build_model(run)
+    params = model.init(jax.random.PRNGKey(0))
+    loop = TrainLoop(model, run, params, ckpt_dir=args.ckpt)
+    loop.guard.install()  # SIGTERM -> final checkpoint
+    if loop.try_restore():
+        print(f"resumed from step {loop.step} "
+              f"(data_step={loop.pipeline.step})")
+    while loop.step < args.steps:
+        stats = loop.run_steps(10)
+        print(f"step {loop.step:5d} loss={stats['loss']:.4f} "
+              f"lr={stats['lr']:.2e} gnorm={stats['grad_norm']:.2f} "
+              f"({stats['step_time']*1000:.0f} ms/step, schedule="
+              f"{run.train.schedule})")
+    if args.ckpt:
+        loop.save()
+        loop.ckpt.wait()
+        print("final checkpoint written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,354 @@
+"""Configuration system for the repro framework.
+
+Plain frozen dataclasses (no external deps) describing:
+  * ModelConfig    — architecture hyperparameters (one per assigned arch)
+  * SpecEEConfig   — the paper's technique knobs (T1/T2/T3)
+  * ShardingConfig — parallelism policy selection
+  * TrainConfig    — optimizer/schedule/batching for training
+  * ServeConfig    — serving engine knobs
+  * RunConfig      — the top-level bundle the launcher consumes
+
+Every assigned architecture ships as a module in ``repro.configs`` that returns a
+fully-populated RunConfig; reduced "smoke" variants are derived mechanically via
+``ModelConfig.smoke()`` so CPU tests never instantiate full-size weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds — the model zoo is assembled from these.
+# ---------------------------------------------------------------------------
+ATTN = "attention"            # global causal (or bidirectional for encoders) attention
+LOCAL_ATTN = "local_attention"  # sliding-window attention
+RGLRU = "rglru"               # Real-Gated LRU recurrence (RecurrentGemma)
+SSD = "ssd"                   # Mamba2 state-space duality block
+
+FAMILY_DENSE = "dense"
+FAMILY_MOE = "moe"
+FAMILY_VLM = "vlm"
+FAMILY_AUDIO = "audio"
+FAMILY_HYBRID = "hybrid"
+FAMILY_SSM = "ssm"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    num_experts_per_tok: int
+    # d_ff of each expert (may differ from the dense d_ff field)
+    expert_d_ff: int
+    # jitter / load-balancing loss weight used in training
+    router_aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) hyperparameters."""
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    conv_kernel: int = 4
+    chunk_size: int = 64
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU hyperparameters."""
+    lru_width: Optional[int] = None       # defaults to d_model
+    conv_kernel: int = 4
+    window: int = 2048                    # local attention window for LOCAL_ATTN blocks
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | vlm | audio | hybrid | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int              # query heads (0 for attention-free archs)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // num_heads
+    # block pattern; if empty, num_layers × ATTN (or SSD for ssm family)
+    block_pattern: Tuple[str, ...] = ()
+    causal: bool = True         # False for encoder-only archs
+    use_bias: bool = False
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    activation: str = "silu"    # silu | gelu
+    rope_theta: float = 10000.0
+    gated_mlp: bool = True      # silu-gated 3-matrix MLP vs plain 2-matrix MLP
+    tie_embeddings: bool = False
+    max_seq_len: int = 524_288
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # modality frontend stub: "none" | "vision_patches" | "audio_frames"
+    frontend: str = "none"
+    frontend_tokens: int = 256  # patches/frames prepended by the stub
+    dtype: str = "bfloat16"     # compute/weight dtype for dry-run & serving
+    param_dtype: str = "float32"  # master weights for training
+
+    # ----- derived -----
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    def blocks(self) -> Tuple[str, ...]:
+        if self.block_pattern:
+            assert len(self.block_pattern) == self.num_layers, (
+                f"{self.name}: block_pattern len {len(self.block_pattern)} != "
+                f"num_layers {self.num_layers}")
+            return self.block_pattern
+        kind = SSD if self.family == FAMILY_SSM else ATTN
+        return tuple([kind] * self.num_layers)
+
+    def is_decoder(self) -> bool:
+        return self.causal
+
+    def is_attention_free(self) -> bool:
+        return all(b == SSD for b in self.blocks())
+
+    def supports_long_context(self) -> bool:
+        """True iff no block is quadratic in sequence length (global attention)."""
+        return all(b in (SSD, RGLRU, LOCAL_ATTN) for b in self.blocks())
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim()
+        n_mlp_mats = 3 if self.gated_mlp else 2
+        total = self.vocab_size * d              # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d         # lm head
+        for kind in self.blocks():
+            if kind in (ATTN, LOCAL_ATTN):
+                q = d * self.num_heads * hd
+                kv = 2 * d * self.num_kv_heads * hd
+                o = self.num_heads * hd * d
+                total += q + kv + o
+                if self.moe is not None:
+                    e = self.moe
+                    total += e.num_experts * n_mlp_mats * d * e.expert_d_ff + d * e.num_experts
+                else:
+                    total += n_mlp_mats * d * self.d_ff
+                total += 2 * d                   # two norms
+            elif kind == RGLRU:
+                w = (self.rglru.lru_width or d) if self.rglru else d
+                # conv + in/out projections + gates (a, input gate)
+                total += 2 * d * w + w * d + 2 * w * w + (self.rglru.conv_kernel if self.rglru else 4) * w
+                if self.moe is not None:
+                    e = self.moe
+                    total += e.num_experts * n_mlp_mats * d * e.expert_d_ff
+                else:
+                    total += n_mlp_mats * d * self.d_ff
+                total += 2 * d
+            elif kind == SSD:
+                s = self.ssm or SSMConfig()
+                di = s.d_inner(d)
+                nh = s.n_heads(d)
+                # in_proj produces [z, x, B, C, dt]
+                total += d * (2 * di + 2 * s.d_state + nh)
+                total += s.conv_kernel * (di + 2 * s.d_state)
+                total += di * d                  # out proj
+                total += 2 * nh + d              # A_log, D, norm
+        total += d                               # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        n_mlp_mats = 3 if self.gated_mlp else 2
+        full_experts = self.num_layers * e.num_experts * n_mlp_mats * self.d_model * e.expert_d_ff
+        active_experts = self.num_layers * e.num_experts_per_tok * n_mlp_mats * self.d_model * e.expert_d_ff
+        return self.param_count() - full_experts + active_experts
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        kw: Dict[str, Any] = dict(
+            name=self.name + "-smoke",
+            # hybrids keep two full pattern units so multi-unit loop paths are
+            # exercised; homogeneous stacks shrink to 4 layers
+            num_layers=6 if self.block_pattern else min(self.num_layers, 4),
+            d_model=128,
+            num_heads=4 if self.num_heads else 0,
+            num_kv_heads=0,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32 if self.num_heads else 0,
+            max_seq_len=512,
+            frontend_tokens=8 if self.frontend != "none" else self.frontend_tokens,
+            dtype="float32",
+        )
+        # preserve GQA ratio shape: kv == heads (MHA) stays MHA; otherwise kv < heads
+        if self.num_heads:
+            if self.num_kv_heads == self.num_heads:
+                kw["num_kv_heads"] = 4
+            elif self.num_kv_heads == 1:
+                kw["num_kv_heads"] = 1
+            else:
+                kw["num_kv_heads"] = 2
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(num_experts=4,
+                                  num_experts_per_tok=min(2, self.moe.num_experts_per_tok),
+                                  expert_d_ff=128)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(d_state=16, expand=2, head_dim=32, conv_kernel=4,
+                                  chunk_size=32)
+        if self.rglru is not None:
+            kw["rglru"] = RGLRUConfig(lru_width=128, conv_kernel=4, window=64)
+        if self.block_pattern:
+            # rebuild a short pattern with the same mix
+            n = kw["num_layers"]
+            pat = tuple(self.block_pattern[i % len(self.block_pattern)] for i in range(n))
+            kw["block_pattern"] = pat
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# SpecEE technique configuration (paper defaults)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SpecEEConfig:
+    enabled: bool = True
+    num_speculative: int = 4          # k speculative tokens (paper: 4)
+    predictor_hidden: int = 512       # MLP hidden dim (paper DSE optimum)
+    predictor_layers: int = 2         # MLP depth (paper DSE optimum)
+    exit_threshold: float = 0.5       # sigmoid threshold
+    # T2: two-level scheduling
+    schedule_enabled: bool = True
+    online_window: int = 5            # circular queue length N (paper: 5 tokens)
+    online_radius: int = 2            # ±radius layers (paper: ±2)
+    offline_top_frac: float = 0.3     # fraction of layers kept by offline schedule
+    # T3: speculative decoding + hyper-token mapping
+    tree_depth: int = 3
+    tree_branch: int = 3              # top-b expansion per node
+    # draft model (EAGLE-style single-layer head)
+    draft_layers: int = 1
+    # KV/state propagation for skipped layers
+    propagate_kv: bool = True
+
+    def feature_dim(self) -> int:
+        return 3 * self.num_speculative  # logits, local probs, prob variation
+
+
+# ---------------------------------------------------------------------------
+# Sharding / distribution
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardingConfig:
+    # policy: "tp_dp"   — weights replicated over data, TP over model (small archs)
+    #         "tp2d"    — weights sharded over (data, model) 2-D (big archs)
+    #         "fsdp_tp" — training: weights+opt sharded over data, TP over model
+    policy: str = "tp_dp"
+    # logical axis names
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: str = "pod"
+    # activation-checkpointing policy for training: "none"|"full"|"dots"
+    remat: str = "full"
+    # shard KV-cache sequence dim over model axis when kv_heads < model_parallelism
+    kv_seq_shard: bool = True
+    # gradient compression on cross-pod reductions
+    grad_compression: bool = False
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatch: int = 0              # 0 = no accumulation
+    steps: int = 100
+    learning_rate: float = 3e-4
+    warmup_steps: int = 10
+    schedule: str = "cosine"         # cosine | wsd | constant
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 128
+    max_seq_len: int = 32768
+    page_size: int = 128             # paged KV block size
+    max_new_tokens: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    specee: SpecEEConfig = field(default_factory=SpecEEConfig)
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+
+    def smoke(self) -> "RunConfig":
+        return replace(
+            self,
+            model=self.model.smoke(),
+            train=replace(self.train, global_batch=4, seq_len=32, steps=2,
+                          microbatch=0, checkpoint_every=1),
+            serve=replace(self.serve, max_batch=2, max_seq_len=128, page_size=16,
+                          max_new_tokens=8),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned shape set)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                   # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+)
+
+
+def shape_by_name(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def applicable_shapes(model: ModelConfig) -> List[ShapeCell]:
+    """Which of the four assigned shapes a given arch runs (skips per DESIGN.md §4)."""
+    out: List[ShapeCell] = []
+    for s in SHAPES:
+        if s.kind == "decode" and not model.is_decoder():
+            continue  # encoder-only: no decode step
+        if s.name == "long_500k" and not model.supports_long_context():
+            continue  # quadratic attention: skip 500k
+        out.append(s)
+    return out

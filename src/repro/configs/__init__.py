@@ -1,0 +1,7 @@
+"""Architecture configs. ``get_config(name)`` returns a RunConfig.
+
+Assigned archs (10) + the paper's own Llama2 family (3).
+"""
+from repro.configs.registry import ARCHS, get_config, register
+
+__all__ = ["ARCHS", "get_config", "register"]

@@ -1,0 +1,28 @@
+"""InternVL2-26B — InternViT frontend (stub) + InternLM2-20B decoder backbone.
+
+[arXiv:2404.16821; hf]
+Backbone: 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+The vision tower is a STUB: ``input_specs()`` provides precomputed patch
+embeddings of shape (batch, frontend_tokens, d_model) prepended to the text.
+"""
+from repro.config import FAMILY_VLM, ModelConfig, RunConfig, ShardingConfig
+from repro.configs.registry import register
+
+
+@register("internvl2-26b")
+def config() -> RunConfig:
+    model = ModelConfig(
+        name="internvl2-26b",
+        family=FAMILY_VLM,
+        num_layers=48,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=92553,
+        frontend="vision_patches",
+        frontend_tokens=256,
+        norm="rmsnorm",
+        activation="silu",
+    )
+    return RunConfig(model=model, sharding=ShardingConfig(policy="tp2d"))

@@ -1,0 +1,21 @@
+"""Llama2-13B (paper Table 3): 40L d_model=5120 40H d_ff=13824 vocab=32000."""
+from repro.config import FAMILY_DENSE, ModelConfig, RunConfig
+from repro.configs.registry import register
+
+
+@register("llama2-13b")
+def config() -> RunConfig:
+    model = ModelConfig(
+        name="llama2-13b",
+        family=FAMILY_DENSE,
+        num_layers=40,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=40,
+        d_ff=13824,
+        vocab_size=32000,
+        norm="rmsnorm",
+        activation="silu",
+        max_seq_len=4096,
+    )
+    return RunConfig(model=model)

@@ -1,0 +1,21 @@
+"""Llama2-70B (paper Table 3): 80L d_model=8192 64H (GQA kv=8) d_ff=28672."""
+from repro.config import FAMILY_DENSE, ModelConfig, RunConfig, ShardingConfig
+from repro.configs.registry import register
+
+
+@register("llama2-70b")
+def config() -> RunConfig:
+    model = ModelConfig(
+        name="llama2-70b",
+        family=FAMILY_DENSE,
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=28672,
+        vocab_size=32000,
+        norm="rmsnorm",
+        activation="silu",
+        max_seq_len=4096,
+    )
+    return RunConfig(model=model, sharding=ShardingConfig(policy="tp2d"))

@@ -1,0 +1,42 @@
+"""RecurrentGemma-9B — RG-LRU + local attention hybrid, 1 attn : 2 recurrent.
+
+[arXiv:2402.19427; unverified]
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000, window 2048.
+Block pattern repeats (rglru, rglru, local_attention); 38 = 12*3 + 2 extra rglru.
+Sub-quadratic -> runs long_500k.
+"""
+from repro.config import (FAMILY_HYBRID, LOCAL_ATTN, RGLRU, RGLRUConfig,
+                          ModelConfig, RunConfig)
+from repro.configs.registry import register
+
+
+def _pattern(n: int):
+    pat = []
+    i = 0
+    while len(pat) < n:
+        pat.append(RGLRU)
+        if len(pat) < n:
+            pat.append(RGLRU)
+        if len(pat) < n:
+            pat.append(LOCAL_ATTN)
+    return tuple(pat[:n])
+
+
+@register("recurrentgemma-9b")
+def config() -> RunConfig:
+    model = ModelConfig(
+        name="recurrentgemma-9b",
+        family=FAMILY_HYBRID,
+        num_layers=38,
+        d_model=4096,
+        num_heads=16,
+        num_kv_heads=1,
+        d_ff=12288,
+        vocab_size=256000,
+        head_dim=256,
+        block_pattern=_pattern(38),
+        rglru=RGLRUConfig(lru_width=4096, conv_kernel=4, window=2048),
+        norm="rmsnorm",
+        activation="gelu",
+    )
+    return RunConfig(model=model)

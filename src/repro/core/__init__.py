@@ -1,0 +1,12 @@
+"""SpecEE core: the paper's contribution.
+
+T1 (algorithm): ``features`` + ``predictor`` — speculation-based lightweight
+    predictor over the k-token reduced search space.
+T2 (system):    ``scheduler`` — two-level (offline + online) heuristic
+    predictor scheduling.
+T3 (mapping):   ``tree`` + hyper-token merged mapping inside ``engine``.
+
+``engine`` assembles them into autoregressive and speculative decode loops;
+``draft`` is the EAGLE-style speculative model; ``predictor_training`` is the
+offline training pipeline (paper §7.4.4).
+"""

@@ -1,0 +1,194 @@
+"""EAGLE-style draft (speculative) model — the DLM (paper §2.2, §3.2).
+
+One decoder layer operating at the target model's ``d_model``, fed with the
+fusion of (embedding of the current token, target hidden state at the current
+position) — EAGLE's "feature uncertainty" recipe. The TLM's embedding matrix
+and LM head are reused, so the DLM adds ~(2D·D + one block) parameters (~3% of
+a 7B model — the paper's memory claim).
+
+The draft keeps its own single-layer KV cache so it can extend speculations
+autoregressively (tree expansion) without re-reading the context.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig, SpecEEConfig
+from repro.models import attention as attn_lib
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+
+def _draft_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The draft layer reuses the target's geometry but is always 1 layer."""
+    kv = cfg.num_kv_heads if cfg.num_kv_heads > 0 else 4
+    heads = cfg.num_heads if cfg.num_heads > 0 else 4
+    return dataclasses.replace(
+        cfg, num_layers=1, num_heads=heads, num_kv_heads=kv,
+        head_dim=cfg.resolved_head_dim() or cfg.d_model // heads,
+        block_pattern=(), causal=True, moe=None)
+
+
+def init_draft(cfg: ModelConfig, key) -> Params:
+    dc = _draft_cfg(cfg)
+    kg = KeyGen(key)
+    d = cfg.d_model
+    dc = dataclasses.replace(dc, d_ff=cfg.d_ff if cfg.d_ff > 0 else 4 * d)
+    return {
+        "fuse": common.init_linear(kg, 2 * d, d, True),
+        "ln1": common.init_norm(dc, d),
+        "attn": attn_lib.init_attention(dc, kg),
+        "ln2": common.init_norm(dc, d),
+        "mlp": common.init_mlp(dc, kg),
+    }
+
+
+def draft_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Any:
+    dc = _draft_cfg(cfg)
+    hd = dc.resolved_head_dim()
+    shape = (batch, max_seq, dc.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _fused_input(cfg: ModelConfig, p: Params, embed_tok: jnp.ndarray,
+                 h_target: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.concatenate([embed_tok, h_target.astype(embed_tok.dtype)], axis=-1)
+    return common.apply_linear(p["fuse"], x)
+
+
+def _pos_col(pos, B: int) -> jnp.ndarray:
+    """Broadcast a scalar or (B,) position to a (B, 1) int32 column."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((B, 1), pos, jnp.int32)
+    return pos[:, None]
+
+
+def draft_step(cfg: ModelConfig, p: Params, embed_tok: jnp.ndarray,
+               h_target: jnp.ndarray, cache: Any, pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Any]:
+    """One draft forward. embed_tok, h_target: (B, D); pos: scalar or (B,)
+    int32 — position this step writes. Returns (h_draft (B, D), new cache)."""
+    dc = _draft_cfg(cfg)
+    B = embed_tok.shape[0]
+    h = _fused_input(cfg, p, embed_tok, h_target)              # (B, D)
+    x = common.apply_norm(dc, p["ln1"], h)[:, None, :]
+    positions = _pos_col(pos, B)
+    q, k, v = attn_lib.qkv(dc, p["attn"], x, positions)
+    rows = jnp.arange(B)
+    pvec = positions[:, 0]
+    k_cache = cache["k"].at[rows, pvec].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[rows, pvec].set(v[:, 0].astype(cache["v"].dtype))
+    o = attn_lib.attend_decode(dc, q, k_cache, v_cache, pvec + 1)
+    h = h + attn_lib.out_proj(p["attn"], o)[:, 0, :]
+    x2 = common.apply_norm(dc, p["ln2"], h[:, None, :])
+    h = h + common.apply_mlp(dc, p["mlp"], x2)[:, 0, :]
+    return h, {"k": k_cache, "v": v_cache}
+
+
+def draft_step_readonly(cfg: ModelConfig, p: Params, embed_tok: jnp.ndarray,
+                        h_parent: jnp.ndarray, cache: Any, pos: jnp.ndarray,
+                        cache_len: jnp.ndarray) -> jnp.ndarray:
+    """Tree-expansion draft forward that does NOT mutate the cache: the node
+    attends the trunk context plus itself; parent information flows through
+    the fused ``h_parent`` input (EAGLE feature chaining). Supports a batch of
+    nodes: embed_tok/h_parent: (B*, D) where B* = batch × nodes-at-level."""
+    dc = _draft_cfg(cfg)
+    B = embed_tok.shape[0]
+    h = _fused_input(cfg, p, embed_tok, h_parent)
+    x = common.apply_norm(dc, p["ln1"], h)[:, None, :]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1 and pos.shape[0] != B:     # per-row pos over node groups
+        pos = jnp.repeat(pos, B // pos.shape[0])
+    positions = _pos_col(pos, B)
+    q, k, v = attn_lib.qkv(dc, p["attn"], x, positions)
+    # context attention (cache may be batch-1-broadcastable over nodes)
+    kc, vc = cache["k"], cache["v"]
+    if kc.shape[0] != B:
+        reps = B // kc.shape[0]
+        kc = jnp.repeat(kc, reps, axis=0)
+        vc = jnp.repeat(vc, reps, axis=0)
+    n_rep = dc.num_heads // dc.num_kv_heads
+    kk = attn_lib._repeat_kv(kc, n_rep)
+    vv = attn_lib._repeat_kv(vc, n_rep)
+    # append self k/v without writing the cache
+    kk_self = attn_lib._repeat_kv(k, n_rep)
+    vv_self = attn_lib._repeat_kv(v, n_rep)
+    kk = jnp.concatenate([kk, kk_self.astype(kk.dtype)], axis=1)
+    vv = jnp.concatenate([vv, vv_self.astype(vv.dtype)], axis=1)
+    S = kc.shape[1]
+    kpos = jnp.arange(S + 1)[None, :]
+    clen = jnp.reshape(cache_len, (-1, 1))
+    if clen.shape[0] not in (1, B):  # (batch,) broadcast over nodes
+        clen = jnp.repeat(clen, B // clen.shape[0], axis=0)
+    valid = (kpos < clen) | (kpos == S)
+    mask = valid[:, None, None, :]
+    o = attn_lib.sdpa(q, kk, vv, mask)
+    h = h + attn_lib.out_proj(p["attn"], o)[:, 0, :]
+    x2 = common.apply_norm(dc, p["ln2"], h[:, None, :])
+    h = h + common.apply_mlp(dc, p["mlp"], x2)[:, 0, :]
+    return h
+
+
+def shift_hidden(h: jnp.ndarray) -> jnp.ndarray:
+    """h[:, t] -> h[:, t-1] with zeros at t=0 (decode-consistent pairing:
+    the draft for the token at position t fuses the hidden of t-1)."""
+    return jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def draft_forward_seq(cfg: ModelConfig, p: Params, embeds: jnp.ndarray,
+                      h_prev: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced full-sequence draft forward (training / collection).
+
+    embeds: (B, S, D) token embeddings at position t; h_prev: (B, S, D) target
+    hidden of position t-1 (use ``shift_hidden``). Returns draft hidden
+    (B, S, D) whose LM-head logits propose the token at t+1."""
+    dc = _draft_cfg(cfg)
+    B, S, D = embeds.shape
+    x = jnp.concatenate([embeds, h_prev.astype(embeds.dtype)], axis=-1)
+    h = common.apply_linear(p["fuse"], x)
+    xn = common.apply_norm(dc, p["ln1"], h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = attn_lib.qkv(dc, p["attn"], xn, positions)
+    o = attn_lib.attend_full(dc, q, k, v)
+    h = h + attn_lib.out_proj(p["attn"], o)
+    x2 = common.apply_norm(dc, p["ln2"], h)
+    return h + common.apply_mlp(dc, p["mlp"], x2)
+
+
+def draft_prefill(cfg: ModelConfig, p: Params, embeds: jnp.ndarray,
+                  h_targets: jnp.ndarray, max_seq: int) -> Any:
+    """Build the draft cache over a prompt. embeds/h_targets: (B, S, D).
+    h_targets are the SAME-position hiddens; the cache stores K/V of the
+    decode-consistent fused inputs (shifted internally)."""
+    dc = _draft_cfg(cfg)
+    B, S, D = embeds.shape
+    x = jnp.concatenate([embeds, shift_hidden(h_targets).astype(embeds.dtype)],
+                        axis=-1)
+    h = common.apply_linear(p["fuse"], x)
+    xn = common.apply_norm(dc, p["ln1"], h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = attn_lib.qkv(dc, p["attn"], xn, positions)
+    pad = [(0, 0), (0, max_seq - S), (0, 0), (0, 0)]
+    return {"k": jnp.pad(k, pad).astype(embeds.dtype),
+            "v": jnp.pad(v, pad).astype(embeds.dtype)}
+
+
+def propose_topk(model, params: Params, h_draft: jnp.ndarray,
+                 k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Draft hidden -> top-k speculative token ids via the TLM's LM head.
+
+    Returns (spec_ids (B, k) int32, spec_logits (B, k) fp32)."""
+    logits = model.logits(params, h_draft)                     # (B, V) fp32
+    vals, ids = jax.lax.top_k(logits, k)
+    return ids.astype(jnp.int32), vals
+
+
+def draft_param_count(cfg: ModelConfig) -> int:
+    p = init_draft(cfg, jax.random.PRNGKey(0))
+    return sum(x.size for x in jax.tree_util.tree_leaves(p))

@@ -1,0 +1,477 @@
+"""SpecEE decode engines (paper Fig. 3 dataflow).
+
+``ar_decode_step``  — autoregressive decoding with speculative early exiting:
+    draft k speculative tokens → layer-by-layer ``lax.while_loop`` with the
+    T1 predictor at T2-scheduled exit points → verification (full LM head at
+    the candidate exit layer; exit iff global argmax ∈ speculative set) →
+    KV/state propagation for skipped layers.
+
+``tree_decode_step`` — T3: EAGLE-style tree speculative decoding with the
+    context-aware merged (hyper-token) mapping; one predictor evaluation per
+    root→leaf path, exit at the rearmost (Cannikin) layer, acceptance by
+    greedy path matching at the exit layer.
+
+Semantics guarantees (property-tested in tests/):
+  * with the predictor disabled (threshold > 1) the emitted tokens are
+    bit-identical to dense greedy decoding;
+  * when a row exits, its emitted token equals argmax of the FULL LM head at
+    the exit layer (verification), and is a member of the speculative set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig, SpecEEConfig
+from repro.core import draft as draft_lib
+from repro.core import features as feat_lib
+from repro.core import predictor as pred_lib
+from repro.core import scheduler as sched_lib
+from repro.models import common
+from repro.models.common import Params, lm_head_weight
+from repro.models.model import Model
+
+
+class SpecEEWeights(NamedTuple):
+    """Everything SpecEE adds next to the frozen target model."""
+    draft: Params
+    predictors: Params          # stacked over exit points
+    offline_mask: jnp.ndarray   # (E,) bool — T2 offline schedule
+
+
+class DecodeState(NamedTuple):
+    cache: Any                  # target model cache (segments + len)
+    draft_cache: Any
+    sched: Dict[str, jnp.ndarray]
+    last_token: jnp.ndarray     # (B,)
+    h_last: jnp.ndarray         # (B, D) final hidden at the last position
+    prng: jnp.ndarray
+
+
+class StepInfo(NamedTuple):
+    exit_point: jnp.ndarray     # (B,) unit index at exit (E if ran full depth)
+    exited: jnp.ndarray         # (B,) bool — predictor-driven exit happened
+    units_run: jnp.ndarray      # () int32 — units the while loops executed
+    spec_hit: jnp.ndarray       # (B,) bool — final token ∈ speculative set
+
+
+def init_specee(model: Model, key) -> SpecEEWeights:
+    spec = model.run.specee
+    k1, k2 = jax.random.split(key)
+    return SpecEEWeights(
+        draft=draft_lib.init_draft(model.cfg, k1),
+        predictors=pred_lib.init_predictors(spec, model.num_exit_points, k2),
+        offline_mask=jnp.ones((model.num_exit_points,), bool),
+    )
+
+
+def init_decode_state(model: Model, params: Params, sw: SpecEEWeights,
+                      batch: Dict[str, jnp.ndarray], max_seq: int,
+                      prng=None) -> Tuple[jnp.ndarray, DecodeState]:
+    """Prefill the target + draft and build the decode state.
+
+    Returns (first greedy token (B,), state)."""
+    spec = model.run.specee
+    logits, cache, extras = model.prefill(params, batch, max_seq=max_seq)
+    h_all = extras["h_final"]                              # (B, S, D)
+    embeds = model.embed(params, batch["tokens"])
+    dcache = draft_lib.draft_prefill(model.cfg, sw.draft, embeds, h_all,
+                                     max_seq)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    state = DecodeState(
+        cache=cache,
+        draft_cache=dcache,
+        sched=sched_lib.init_state(h_all.shape[0], spec),
+        last_token=first,
+        h_last=h_all[:, -1, :],
+        prng=prng if prng is not None else jax.random.PRNGKey(0),
+    )
+    return first, state
+
+
+# ---------------------------------------------------------------------------
+# autoregressive SpecEE step
+# ---------------------------------------------------------------------------
+def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
+                   state: DecodeState,
+                   threshold: Optional[float] = None,
+                   spec_ids_override: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, DecodeState, StepInfo]:
+    """Decode one token for every row with speculative early exiting.
+
+    spec_ids_override: (B, k) — oracle speculative set for tests/upper-bound
+    benchmarks (bypasses the draft proposal, draft cache still maintained).
+    """
+    spec = model.run.specee
+    thresh = spec.exit_threshold if threshold is None else threshold
+    E = model.num_exit_points
+    lm_w = lm_head_weight(params)
+    pos = state.cache["len"]
+    B = state.last_token.shape[0]
+    k = spec.num_speculative
+
+    # ---- 1. speculate: draft proposes k candidate tokens ----
+    emb = model.embed(params, state.last_token[:, None])[:, 0, :]
+    h_draft, draft_cache = draft_lib.draft_step(
+        model.cfg, sw.draft, emb, state.h_last, state.draft_cache, pos)
+    spec_ids, _ = draft_lib.propose_topk(model, params, h_draft, k)
+    if spec_ids_override is not None:
+        spec_ids = spec_ids_override
+
+    # ---- 2. T2 scheduling: which exit points run a predictor ----
+    active = sched_lib.active_mask(state.sched, sw.offline_mask, spec, E)
+
+    # ---- 3. layer loop with early exit ----
+    h = emb
+    exited = jnp.zeros((B,), bool)
+    exit_token = jnp.zeros((B,), jnp.int32)
+    exit_pt = jnp.full((B,), E, jnp.int32)
+    prev_probs = jnp.full((B, k), 1.0 / k, jnp.float32)
+    units_run = jnp.int32(0)
+    new_segs = []
+    ep_base = 0
+    for seg, (unit, reps) in enumerate(model.segments):
+        seg_cache = state.cache["segments"][seg]
+
+        def cond(c):
+            u = c[0]
+            return (u < reps) & ~jnp.all(c[3])
+
+        def body(c):
+            u, h, seg_cache, exited, exit_token, exit_pt, prev_probs, nrun = c
+            live = ~exited
+            h_new, seg_cache = model.run_unit(params, seg, u, h, seg_cache,
+                                              pos, live_mask=live)
+            h = jnp.where(exited[:, None], h, h_new)
+            ep = ep_base + u                                   # global exit pt
+
+            act = jnp.take(active, ep, axis=1) & live          # (B,)
+
+            def with_predictor(args):
+                h, prev_probs, exited, exit_token, exit_pt = args
+                hn = model.final_norm(params, h)
+                feats, probs = feat_lib.extract_features(
+                    hn, lm_w, spec_ids, prev_probs,
+                    use_kernel=getattr(model.flags, "spec_head_kernel", False))
+                pp = pred_lib.predictor_at(sw.predictors, ep)
+                p_exit = pred_lib.apply_predictor(pp, feats)   # (B,)
+                would = act & (p_exit > thresh)
+
+                def verify(args2):
+                    exited, exit_token, exit_pt = args2
+                    glogits = (hn @ lm_w.astype(hn.dtype)).astype(jnp.float32)
+                    gtok = jnp.argmax(glogits, axis=-1).astype(jnp.int32)
+                    confirmed = jnp.any(gtok[:, None] == spec_ids, axis=1)
+                    newly = would & confirmed
+                    exit_token = jnp.where(newly, gtok, exit_token)
+                    exit_pt = jnp.where(newly, ep, exit_pt)
+                    return exited | newly, exit_token, exit_pt
+
+                exited, exit_token, exit_pt = jax.lax.cond(
+                    jnp.any(would), verify, lambda a: a,
+                    (exited, exit_token, exit_pt))
+                prev_probs = jnp.where(act[:, None], probs, prev_probs)
+                return prev_probs, exited, exit_token, exit_pt
+
+            def without_predictor(args):
+                h, prev_probs, exited, exit_token, exit_pt = args
+                return prev_probs, exited, exit_token, exit_pt
+
+            prev_probs, exited, exit_token, exit_pt = jax.lax.cond(
+                jnp.any(act), with_predictor, without_predictor,
+                (h, prev_probs, exited, exit_token, exit_pt))
+            return (u + 1, h, seg_cache, exited, exit_token, exit_pt,
+                    prev_probs, nrun + 1)
+
+        carry = (jnp.int32(0), h, seg_cache, exited, exit_token, exit_pt,
+                 prev_probs, units_run)
+        u_end, h, seg_cache, exited, exit_token, exit_pt, prev_probs, \
+            units_run = jax.lax.while_loop(cond, body, carry)
+
+        # ---- 4. KV/state propagation for units the loop never reached ----
+        def pcond(c):
+            return c[0] < reps
+
+        def pbody(c):
+            u, seg_cache = c
+            seg_cache = model.propagate_unit(params, seg, u, h, seg_cache, pos)
+            return u + 1, seg_cache
+
+        _, seg_cache = jax.lax.while_loop(pcond, pbody, (u_end, seg_cache))
+        new_segs.append(seg_cache)
+        ep_base += reps
+
+    # ---- 5. emit: exited rows use the verified token, others the full head ----
+    final_logits = model.logits(params, h)                     # (B, V) fp32
+    final_tok = jnp.argmax(final_logits, axis=-1).astype(jnp.int32)
+    token = jnp.where(exited, exit_token, final_tok)
+    spec_hit = jnp.any(token[:, None] == spec_ids, axis=1)
+
+    # ---- 6. bookkeeping ----
+    sched = sched_lib.update(state.sched,
+                             jnp.minimum(exit_pt, E - 1))
+    new_state = DecodeState(
+        cache={"segments": new_segs, "len": pos + 1},
+        draft_cache=draft_cache,
+        sched=sched,
+        last_token=token,
+        h_last=h,
+        prng=state.prng,
+    )
+    info = StepInfo(exit_point=exit_pt, exited=exited, units_run=units_run,
+                    spec_hit=spec_hit)
+    return token, new_state, info
+
+
+# ---------------------------------------------------------------------------
+# T3: tree speculative decoding with hyper-token merged early exit
+# ---------------------------------------------------------------------------
+class TreeStepInfo(NamedTuple):
+    accepted_len: jnp.ndarray   # (B,) matched draft tokens (excl. bonus)
+    exit_point: jnp.ndarray     # (B,) unit index at exit
+    exited: jnp.ndarray         # (B,)
+    units_run: jnp.ndarray      # ()
+
+
+def build_tree(model: Model, params: Params, sw: SpecEEWeights,
+               state: DecodeState, tree) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Draft-expand the static tree. Returns (node_tokens (B, N) int32,
+    node_parent_hidden (B, N, D) draft hiddens, new draft cache)."""
+    cfg = model.cfg
+    B = state.last_token.shape[0]
+    pos0 = state.cache["len"]
+    b = tree.branch
+    # root draft step (writes the trunk cache at pos0)
+    emb = model.embed(params, state.last_token[:, None])[:, 0, :]
+    h_root, draft_cache = draft_lib.draft_step(
+        cfg, sw.draft, emb, state.h_last, state.draft_cache, pos0)
+
+    node_tokens = jnp.zeros((B, tree.num_nodes), jnp.int32)
+    node_tokens = node_tokens.at[:, 0].set(state.last_token)
+    h_nodes = jnp.zeros((B, tree.num_nodes) + h_root.shape[-1:], h_root.dtype)
+    h_nodes = h_nodes.at[:, 0].set(h_root)
+
+    level_off = tree.level_offsets
+    for lvl in range(1, tree.depth + 1):
+        p_off, p_size = level_off[lvl - 1], tree.level_sizes[lvl - 1]
+        off, size = level_off[lvl], tree.level_sizes[lvl]
+        # children tokens = top-b of each parent's draft logits
+        hp = h_nodes[:, p_off:p_off + p_size].reshape(B * p_size, -1)
+        logits = model.logits(params, hp)
+        _, topb = jax.lax.top_k(logits, b)
+        toks = topb.astype(jnp.int32).reshape(B, p_size * b)
+        node_tokens = jax.lax.dynamic_update_slice_in_dim(
+            node_tokens, toks, off, axis=1)
+        if lvl < tree.depth:  # need hiddens to expand further
+            emb_c = model.embed(params, toks.reshape(B * size, 1))[:, 0, :]
+            hp_rep = jnp.repeat(hp.reshape(B, p_size, -1), b, axis=1
+                                ).reshape(B * size, -1)
+            h_c = draft_lib.draft_step_readonly(
+                cfg, sw.draft, emb_c, hp_rep, draft_cache, pos0 + lvl,
+                pos0 + 1)
+            h_nodes = jax.lax.dynamic_update_slice_in_dim(
+                h_nodes, h_c.reshape(B, size, -1), off, axis=1)
+    return node_tokens, h_nodes, draft_cache
+
+
+def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
+                     state: DecodeState, tree,
+                     threshold: Optional[float] = None,
+                     node_tokens_override: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, DecodeState,
+                                TreeStepInfo]:
+    """One tree-speculative step with hyper-token merged early exit.
+
+    Returns (tokens (B, depth+1) emitted left-aligned, num_emitted (B,),
+    new state, info). Cache must have ``tree.num_nodes`` scratch slots beyond
+    ``max_seq`` (see ``init_tree_decode_state``).
+    """
+    assert model.supports_tree(), \
+        "T3 tree mode requires a pure-attention stack (DESIGN.md §4)"
+    spec = model.run.specee
+    thresh = spec.exit_threshold if threshold is None else threshold
+    E = model.num_exit_points
+    lm_w = lm_head_weight(params)
+    B = state.last_token.shape[0]
+    N = tree.num_nodes
+    k = spec.num_speculative
+    pos0 = state.cache["len"]
+    # static scratch offset = allocated seq len minus N
+    any_k = jax.tree_util.tree_leaves(state.cache["segments"][0])[0]
+    scratch_off = any_k.shape[2] - N
+
+    node_tokens, h_nodes_draft, draft_cache = build_tree(
+        model, params, sw, state, tree)
+    if node_tokens_override is not None:  # oracle mode for tests/benchmarks
+        node_tokens = node_tokens_override.at[:, 0].set(state.last_token)
+
+    # children token matrix per node, padded to k for the predictor features
+    children = jnp.asarray(tree.children)                   # (N, b)
+    safe_children = jnp.maximum(children, 0)
+    child_toks = node_tokens[:, safe_children]              # (B, N, b)
+    if tree.branch < k:
+        pad = jnp.repeat(child_toks[:, :, :1], k - tree.branch, axis=2)
+        child_toks = jnp.concatenate([child_toks, pad], axis=2)
+    else:
+        child_toks = child_toks[:, :, :k]
+
+    # ---- layer loop with hyper-token early exit ----
+    mask = tree.attention_mask(pos0, scratch_off)           # (B|1,1,N,S+N)
+    positions = jnp.broadcast_to(tree.positions(pos0), (B, N))
+    h = model.embed(params, node_tokens)                    # (B, N, D)
+    exited = jnp.zeros((B,), bool)
+    exit_pt = jnp.full((B,), E, jnp.int32)
+    prev_probs = jnp.full((B, N, k), 1.0 / k, jnp.float32)
+    units_run = jnp.int32(0)
+    active = sched_lib.active_mask(state.sched, sw.offline_mask, spec, E)
+    path_nodes = jnp.asarray(tree.path_nodes)               # (P, depth+1)
+    new_segs = []
+    ep_base = 0
+    for seg, (unit, reps) in enumerate(model.segments):
+        seg_cache = state.cache["segments"][seg]
+
+        def cond(c):
+            return (c[0] < reps) & ~jnp.all(c[3])
+
+        def body(c):
+            u, h, seg_cache, exited, exit_pt, prev_probs, nrun = c
+            live = ~exited
+            h_new, seg_cache = model.run_unit_tree(
+                params, seg, u, h, seg_cache, mask, positions, scratch_off)
+            h = jnp.where(exited[:, None, None], h, h_new)
+            ep = ep_base + u
+            act = jnp.take(active, ep, axis=1) & live
+
+            def with_predictor(args):
+                h, prev_probs, exited, exit_pt = args
+                hn = model.final_norm(params, h).reshape(B * N, -1)
+                feats, probs = feat_lib.extract_features(
+                    hn, lm_w, child_toks.reshape(B * N, k),
+                    prev_probs.reshape(B * N, k))
+                feats = feats.reshape(B, N, -1)
+                probs = probs.reshape(B, N, k)
+                # hyper-token merge: one predictor eval per root→leaf path
+                pf, _ = feat_lib.merge_path_features(
+                    feats, probs, path_nodes,
+                    jnp.full((path_nodes.shape[0],), path_nodes.shape[1]))
+                pp = pred_lib.predictor_at(sw.predictors, ep)
+                p_exit = pred_lib.apply_predictor(pp, pf)   # (B, P)
+                fire = jnp.max(p_exit, axis=1) > thresh     # best path fires
+                newly = act & fire
+                exit_pt = jnp.where(newly, ep, exit_pt)
+                prev_probs = jnp.where(act[:, None, None], probs, prev_probs)
+                return prev_probs, exited | newly, exit_pt
+
+            prev_probs, exited, exit_pt = jax.lax.cond(
+                jnp.any(act), with_predictor,
+                lambda a: (a[1], a[2], a[3]),
+                (h, prev_probs, exited, exit_pt))
+            return u + 1, h, seg_cache, exited, exit_pt, prev_probs, nrun + 1
+
+        carry = (jnp.int32(0), h, seg_cache, exited, exit_pt, prev_probs,
+                 units_run)
+        u_end, h, seg_cache, exited, exit_pt, prev_probs, units_run = \
+            jax.lax.while_loop(cond, body, carry)
+
+        def pcond(c):
+            return c[0] < reps
+
+        def pbody(c):
+            u, sc = c
+            sc = model.propagate_unit_tree(params, seg, u, h, sc, positions,
+                                           scratch_off)
+            return u + 1, sc
+
+        _, seg_cache = jax.lax.while_loop(pcond, pbody, (u_end, seg_cache))
+        new_segs.append(seg_cache)
+        ep_base += reps
+
+    # ---- acceptance walk on global logits at the (per-row) exit layer ----
+    glogits = model.logits(params, h)                       # (B, N, V) fp32
+    gtok = jnp.argmax(glogits, axis=-1).astype(jnp.int32)   # (B, N)
+
+    rows = jnp.arange(B)
+    cur = jnp.zeros((B,), jnp.int32)                        # root
+    acc_nodes = jnp.full((B, tree.depth + 1), -1, jnp.int32)
+    acc_nodes = acc_nodes.at[:, 0].set(0)
+    acc_len = jnp.ones((B,), jnp.int32)                     # root always in
+    out_tokens = jnp.zeros((B, tree.depth + 1), jnp.int32)
+    n_emit = jnp.zeros((B,), jnp.int32)
+    alive = jnp.ones((B,), bool)
+    for d in range(1, tree.depth + 1):
+        target = gtok[rows, cur]                            # (B,)
+        ch = safe_children[cur]                             # (B, b)
+        ch_tok = node_tokens[rows[:, None], ch]             # (B, b)
+        match = (ch_tok == target[:, None]) & (children[cur] >= 0)
+        hit = jnp.any(match, axis=1) & alive
+        nxt = ch[rows, jnp.argmax(match, axis=1)]
+        out_tokens = out_tokens.at[:, d - 1].set(
+            jnp.where(hit, target, out_tokens[:, d - 1]))
+        n_emit = n_emit + hit.astype(jnp.int32)
+        acc_nodes = acc_nodes.at[:, d].set(jnp.where(hit, nxt, -1))
+        acc_len = acc_len + hit.astype(jnp.int32)
+        cur = jnp.where(hit, nxt, cur)
+        alive = hit
+    # bonus token: TLM greedy at the last accepted node
+    bonus = gtok[rows, cur]
+    out_tokens = out_tokens.at[rows, n_emit].set(bonus)
+    n_emit = n_emit + 1
+
+    # ---- commit: copy accepted K/V into real cache positions ----
+    cache = {"segments": new_segs, "len": pos0}
+    cache = model.accept_tree_kv(cache, acc_nodes, acc_len, pos0, scratch_off)
+    cache["len"] = pos0 + acc_len                           # root + matched
+
+    # ---- draft cache catch-up for accepted tokens beyond the root ----
+    h_last = h[rows, cur]                                   # (B, D) exit hidden
+    for d in range(1, tree.depth + 1):
+        valid = d < acc_len
+        tok_d = out_tokens[:, d - 1]                        # accepted token d
+        emb_d = model.embed(params, tok_d[:, None])[:, 0, :]
+        parent_h = h[rows, jnp.maximum(acc_nodes[:, d - 1], 0)]
+        h_d, dc_new = draft_lib.draft_step(
+            model.cfg, sw.draft, emb_d, parent_h, draft_cache, pos0 + d)
+        draft_cache = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                valid[:, None, None, None], new, old), dc_new, draft_cache)
+
+    sched = sched_lib.update(state.sched, jnp.minimum(exit_pt, E - 1))
+    new_state = DecodeState(cache=cache, draft_cache=draft_cache, sched=sched,
+                            last_token=bonus, h_last=h_last, prng=state.prng)
+    info = TreeStepInfo(accepted_len=acc_len - 1, exit_point=exit_pt,
+                        exited=exited, units_run=units_run)
+    return out_tokens, n_emit, new_state, info
+
+
+def init_tree_decode_state(model: Model, params: Params, sw: SpecEEWeights,
+                           batch: Dict[str, jnp.ndarray], max_seq: int,
+                           tree) -> Tuple[jnp.ndarray, DecodeState]:
+    """Like ``init_decode_state`` but reserves N scratch slots in the cache
+    (cache lengths are per-row throughout — rows accept ragged counts)."""
+    return init_decode_state(model, params, sw, batch,
+                             max_seq + tree.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# dense baseline step sharing the same state plumbing (for A/B benchmarks)
+# ---------------------------------------------------------------------------
+def dense_decode_step(model: Model, params: Params, sw: SpecEEWeights,
+                      state: DecodeState) -> Tuple[jnp.ndarray, DecodeState,
+                                                   StepInfo]:
+    pos = state.cache["len"]
+    logits, cache = model.decode_step(params, state.last_token, state.cache)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    B = token.shape[0]
+    E = model.num_exit_points
+    new_state = DecodeState(cache=cache, draft_cache=state.draft_cache,
+                            sched=state.sched, last_token=token,
+                            h_last=state.h_last, prng=state.prng)
+    info = StepInfo(exit_point=jnp.full((B,), E, jnp.int32),
+                    exited=jnp.zeros((B,), bool),
+                    units_run=jnp.int32(E),
+                    spec_hit=jnp.zeros((B,), bool))
+    return token, new_state, info

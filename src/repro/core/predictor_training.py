@@ -1,0 +1,186 @@
+"""Offline predictor training (paper §7.4.4) + offline exit statistics (§5.3).
+
+The paper's recipe:
+  * run the frozen LLM over prompts, collecting at every exit point the
+    12-dim speculation features and a binary label — does the *early* global
+    argmax at this layer equal the *final* (last-layer) argmax?
+  * train one small MLP per exit point (minutes of work; ~16K samples/layer;
+    ~2% of the data already reaches good accuracy — Fig. 18);
+  * histogram where exits happen → the T2 offline schedule.
+
+Everything runs on the reduced smoke configs in tests/examples; the same code
+scales to real checkpoints (it is jit-compiled and batched).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RunConfig, SpecEEConfig
+from repro.core import draft as draft_lib
+from repro.core import features as feat_lib
+from repro.core import predictor as pred_lib
+from repro.core import scheduler as sched_lib
+from repro.models.common import Params, lm_head_weight
+from repro.models.model import Model
+
+
+class FeatureDataset(NamedTuple):
+    features: jnp.ndarray   # (E, T, 3k)
+    labels: jnp.ndarray     # (E, T) float32 {0, 1}
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _collect_batch(model: Model, params: Params, draft_params: Params,
+                   tokens: jnp.ndarray) -> FeatureDataset:
+    """Teacher-forced feature collection over a token batch.
+
+    For every position t and exit point e: features from the hidden state
+    after unit e, label = [argmax(LM head at e) == argmax(LM head at final)].
+    The speculative set is the draft's top-k at each position, exactly as at
+    inference time.
+    """
+    spec = model.run.specee
+    k = spec.num_speculative
+    lm_w = lm_head_weight(params)
+    B, S = tokens.shape
+
+    h = model.embed(params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    # per-unit hidden states: rerun forward, capturing after each unit
+    hs: List[jnp.ndarray] = []
+    for seg, (unit, reps) in enumerate(model.segments):
+        def body(hc, unit_params):
+            from repro.models.model import _block_seq
+            for i, kind in enumerate(unit):
+                hc, _, _ = _block_seq(model.cfg, kind, unit_params[f"u{i}"],
+                                      hc, positions, model.flags, False)
+            return hc, hc
+        h, h_stack = jax.lax.scan(body, h, params["segments"][seg])
+        hs.append(h_stack)                                  # (reps, B, S, D)
+    h_units = jnp.concatenate(hs, axis=0)                   # (E, B, S, D)
+    E = h_units.shape[0]
+
+    # draft speculative tokens for every position (teacher-forced), with the
+    # decode-consistent pairing: position t fuses (embed(tokens[t]), h[t-1])
+    emb = model.embed(params, tokens)
+    hd = draft_lib.draft_forward_seq(model.cfg, draft_params, emb,
+                                     draft_lib.shift_hidden(h_units[-1]))
+    dlogits = model.logits(params, hd)                      # (B, S, V)
+    _, spec_ids = jax.lax.top_k(dlogits, k)
+    spec_ids = spec_ids.astype(jnp.int32)                   # (B, S, k)
+
+    # final-layer greedy target
+    final_logits = model.logits(params, h_units[-1])        # (B, S, V)
+    final_tok = jnp.argmax(final_logits, axis=-1)
+
+    flat_ids = spec_ids.reshape(B * S, k)
+
+    def per_unit(carry, h_e):
+        prev = carry                                        # (B*S, k)
+        hn = model.final_norm(params, h_e).reshape(B * S, -1)
+        feats, probs = feat_lib.extract_features(hn, lm_w, flat_ids, prev)
+        glog = (model.final_norm(params, h_e) @
+                lm_w.astype(h_e.dtype)).astype(jnp.float32)
+        gtok = jnp.argmax(glog, axis=-1)
+        label = (gtok == final_tok).reshape(B * S).astype(jnp.float32)
+        return probs, (feats, label)
+
+    prev0 = jnp.full((B * S, k), 1.0 / k, jnp.float32)
+    _, (feats, labels) = jax.lax.scan(per_unit, prev0, h_units)
+    return FeatureDataset(features=feats, labels=labels)    # (E,T,3k),(E,T)
+
+
+def collect_dataset(model: Model, params: Params, draft_params: Params,
+                    token_batches: List[jnp.ndarray]) -> FeatureDataset:
+    parts = [_collect_batch(model, params, draft_params, tb)
+             for tb in token_batches]
+    return FeatureDataset(
+        features=jnp.concatenate([p.features for p in parts], axis=1),
+        labels=jnp.concatenate([p.labels for p in parts], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# training loop (Adam on stacked predictors — all exit points in parallel)
+# ---------------------------------------------------------------------------
+def train_predictors(spec: SpecEEConfig, data: FeatureDataset, key,
+                     steps: int = 300, lr: float = 1e-3, batch: int = 256,
+                     pos_weight: float = 1.0
+                     ) -> Tuple[Params, Dict[str, float]]:
+    E, T, F = data.features.shape
+    params = pred_lib.init_predictors(spec, E, key)
+
+    def loss_fn(p, feats, labels):
+        # feats: (E, b, F); labels: (E, b)
+        probs = jax.vmap(pred_lib.apply_predictor)(p, feats)
+        eps = 1e-6
+        bce = -(pos_weight * labels * jnp.log(probs + eps) +
+                (1 - labels) * jnp.log(1 - probs + eps))
+        return jnp.mean(bce)
+
+    # Adam state
+    flat, tree = jax.tree_util.tree_flatten(params)
+    m = [jnp.zeros_like(x) for x in flat]
+    v = [jnp.zeros_like(x) for x in flat]
+
+    @jax.jit
+    def step(params, m, v, i, feats, labels):
+        m_t = jax.tree_util.tree_unflatten(tree, m)
+        v_t = jax.tree_util.tree_unflatten(tree, v)
+        g = jax.grad(loss_fn)(params, feats, labels)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m_t = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m_t, g)
+        v_t = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b,
+                                     v_t, g)
+        mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** (i + 1)), m_t)
+        vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** (i + 1)), v_t)
+        params = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+            params, mhat, vhat)
+        return (params, jax.tree_util.tree_leaves(m_t),
+                jax.tree_util.tree_leaves(v_t))
+
+    rng = np.random.default_rng(0)
+    for i in range(steps):
+        idx = rng.integers(0, T, size=(batch,))
+        feats = data.features[:, idx, :]
+        labels = data.labels[:, idx]
+        params, m, v = step(params, m, v, i, feats, labels)
+
+    # metrics on the full set
+    probs = jax.vmap(pred_lib.apply_predictor)(params, data.features)
+    pred = (probs > spec.exit_threshold).astype(jnp.float32)
+    acc = float(jnp.mean((pred == data.labels).astype(jnp.float32)))
+    pos_rate = float(jnp.mean(data.labels))
+    return params, {"accuracy": acc, "positive_rate": pos_rate}
+
+
+# ---------------------------------------------------------------------------
+# offline exit statistics -> T2 offline schedule
+# ---------------------------------------------------------------------------
+def offline_exit_counts(model: Model, params: Params, sw, token_batches,
+                        max_new: int = 16) -> np.ndarray:
+    """Run AR SpecEE decoding with ALL predictors active and histogram where
+    exits occur (paper Fig. 10)."""
+    from repro.core import engine as eng
+    import dataclasses
+    E = model.num_exit_points
+    counts = np.zeros(E + 1, np.int64)
+    spec_all = dataclasses.replace(model.run.specee, schedule_enabled=False)
+    model_all = type(model)(dataclasses.replace(model.run, specee=spec_all),
+                            model.flags)
+    for tokens in token_batches:
+        B, T = tokens.shape
+        first, st = eng.init_decode_state(model_all, params, sw,
+                                          {"tokens": tokens}, T + max_new + 1)
+        for _ in range(max_new):
+            tok, st, info = eng.ar_decode_step(model_all, params, sw, st)
+            pts = np.asarray(jnp.minimum(info.exit_point, E))
+            for p in pts:
+                counts[p] += 1
+    return counts

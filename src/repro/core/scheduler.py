@@ -1,0 +1,72 @@
+"""T2 — two-level heuristic predictor scheduling (paper §5).
+
+Offline level: exit frequencies follow a skewed distribution (paper Fig. 10:
+bottom-50% layers carry <20% of exits). A one-time offline pass histograms
+exit points; the top ``offline_top_frac`` fraction becomes a static boolean
+mask baked into the model's run configuration.
+
+Online level: context similarity (paper Fig. 11: the exit layer of the current
+token lies within ±2 of the last 5 tokens' exit layers with ~80% probability).
+A circular queue of the last N exit points is maintained per sequence; the
+active set is (offline mask) ∪ (±radius neighbourhoods of queued exits).
+
+Everything is a pytree of arrays so it lives inside jitted decode loops.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SpecEEConfig
+
+SchedState = Dict[str, jnp.ndarray]
+
+
+def init_state(batch: int, spec: SpecEEConfig) -> SchedState:
+    return {
+        "queue": jnp.full((batch, spec.online_window), -1, jnp.int32),
+        "qpos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def offline_mask_from_counts(counts: jnp.ndarray,
+                             spec: SpecEEConfig) -> jnp.ndarray:
+    """counts: (E,) exit-frequency histogram -> (E,) bool top-fraction mask."""
+    E = counts.shape[0]
+    keep = max(1, int(round(spec.offline_top_frac * E)))
+    order = jnp.argsort(-counts, stable=True)
+    mask = jnp.zeros((E,), bool).at[order[:keep]].set(True)
+    return mask
+
+
+def active_mask(state: SchedState, offline: jnp.ndarray,
+                spec: SpecEEConfig, num_exit_points: int) -> jnp.ndarray:
+    """-> (B, E) bool: which exit points run a predictor for each row.
+
+    If scheduling is disabled, every exit point is active (T1-only mode).
+    """
+    B = state["queue"].shape[0]
+    if not spec.schedule_enabled:
+        return jnp.ones((B, num_exit_points), bool)
+    pts = jnp.arange(num_exit_points)[None, None, :]           # (1,1,E)
+    q = state["queue"][:, :, None]                             # (B,N,1)
+    near = (jnp.abs(pts - q) <= spec.online_radius) & (q >= 0)
+    online = jnp.any(near, axis=1)                             # (B,E)
+    return online | offline[None, :]
+
+
+def update(state: SchedState, exit_point: jnp.ndarray) -> SchedState:
+    """Push each row's exit point into its circular queue. exit_point: (B,)."""
+    B, N = state["queue"].shape
+    rows = jnp.arange(B)
+    queue = state["queue"].at[rows, state["qpos"]].set(exit_point.astype(jnp.int32))
+    return {"queue": queue, "qpos": (state["qpos"] + 1) % N}
+
+
+def expected_active_count(state: SchedState, offline: jnp.ndarray,
+                          spec: SpecEEConfig, num_exit_points: int) -> jnp.ndarray:
+    """Average number of active predictors per row (paper: ~10.2 on Llama2-7B)."""
+    return jnp.mean(jnp.sum(active_mask(state, offline, spec, num_exit_points)
+                            .astype(jnp.float32), axis=-1))

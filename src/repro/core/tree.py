@@ -1,0 +1,123 @@
+"""T3 — static token tree for speculative decoding + hyper-token paths.
+
+A full ``branch``-ary tree of ``depth`` draft levels under a root node:
+node 0 is the *root* — the last accepted token (the TLM input for the current
+position); level-ℓ nodes (ℓ ≥ 1) are draft candidates for position pos0+ℓ.
+BFS (level-major) node numbering.
+
+The hyper-token mapping (paper §6.2) merges every root→leaf path into one
+predictor search space; ``paths()`` enumerates them with node-index matrices
+used by ``features.merge_path_features``.
+
+All structure is static numpy (shapes fixed at trace time); only token values
+are traced.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    depth: int = 2     # draft levels under the root
+    branch: int = 3    # children per node
+
+    @cached_property
+    def level_sizes(self) -> List[int]:
+        return [1] + [self.branch ** l for l in range(1, self.depth + 1)]
+
+    @cached_property
+    def num_nodes(self) -> int:
+        return sum(self.level_sizes)
+
+    @cached_property
+    def level_offsets(self) -> List[int]:
+        offs, acc = [], 0
+        for s in self.level_sizes:
+            offs.append(acc)
+            acc += s
+        return offs
+
+    @cached_property
+    def levels(self) -> np.ndarray:
+        """(N,) level of each node (root = 0)."""
+        out = np.zeros(self.num_nodes, np.int32)
+        for l, (off, size) in enumerate(zip(self.level_offsets, self.level_sizes)):
+            out[off:off + size] = l
+        return out
+
+    @cached_property
+    def parents(self) -> np.ndarray:
+        """(N,) parent node index; root's parent = -1."""
+        par = np.full(self.num_nodes, -1, np.int32)
+        for l in range(1, self.depth + 1):
+            off, size = self.level_offsets[l], self.level_sizes[l]
+            poff = self.level_offsets[l - 1]
+            for i in range(size):
+                par[off + i] = poff + i // self.branch
+        return par
+
+    @cached_property
+    def ancestor_mask(self) -> np.ndarray:
+        """(N, N) bool: M[i, j] = node i attends node j (j ancestor-or-self)."""
+        N = self.num_nodes
+        m = np.eye(N, dtype=bool)
+        for i in range(N):
+            p = self.parents[i]
+            while p >= 0:
+                m[i, p] = True
+                p = self.parents[p]
+        return m
+
+    @cached_property
+    def path_nodes(self) -> np.ndarray:
+        """(P, depth+1) node indices of each root→leaf path."""
+        leaves_off = self.level_offsets[self.depth]
+        leaves = np.arange(leaves_off, leaves_off + self.level_sizes[self.depth])
+        P = len(leaves)
+        out = np.zeros((P, self.depth + 1), np.int32)
+        for pi, leaf in enumerate(leaves):
+            chain = []
+            n = leaf
+            while n >= 0:
+                chain.append(n)
+                n = self.parents[n]
+            out[pi] = np.array(chain[::-1], np.int32)
+        return out
+
+    @cached_property
+    def children(self) -> np.ndarray:
+        """(N, branch) child node indices (-1 where none — leaves)."""
+        ch = np.full((self.num_nodes, self.branch), -1, np.int32)
+        for i in range(self.num_nodes):
+            p = self.parents[i]
+            if p >= 0:
+                slot = np.argmax(ch[p] < 0)
+                ch[p, slot] = i
+        return ch
+
+    def attention_mask(self, cache_len, max_seq: int) -> jnp.ndarray:
+        """(B|1, 1, N, max_seq + N) bool mask for the tree-verification step.
+
+        Tree queries attend all valid cache positions (< cache_len, which may
+        be per-row) plus their tree ancestors (incl. self), which sit at slots
+        [max_seq, max_seq+N).
+        """
+        N = self.num_nodes
+        kpos = jnp.arange(max_seq)[None, :]
+        clen = jnp.reshape(cache_len, (-1, 1))              # (B|1, 1)
+        ctx = jnp.broadcast_to((kpos < clen)[:, None, :],
+                               (clen.shape[0], N, max_seq))
+        tree = jnp.broadcast_to(jnp.asarray(self.ancestor_mask)[None],
+                                (clen.shape[0], N, N))
+        return jnp.concatenate([ctx, tree], axis=2)[:, None]
+
+    def positions(self, pos0) -> jnp.ndarray:
+        """(B|1, N) absolute position of each node: pos0 + level."""
+        p0 = jnp.reshape(jnp.asarray(pos0, jnp.int32), (-1, 1))
+        return p0 + jnp.asarray(self.levels)[None, :]

@@ -1,0 +1,101 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Design mirrors a production grain/tf.data stack at the interface level:
+  * ``DataPipeline(cfg, model_cfg)`` is an iterator of batches keyed ONLY by
+    (seed, step) — a counter-based (stateless-random) pipeline, so restoring
+    ``state_dict()`` after preemption reproduces the exact token stream with
+    no file offsets to replay (the fault-tolerance story: checkpoint carries
+    {"data_step": N} and the pipeline resumes bit-identically).
+  * batches are host-local numpy; the launcher shards them over the mesh's
+    data axis with ``jax.make_array_from_process_local_data`` in multi-host
+    deployments (single-host путь: device_put with a NamedSharding).
+
+Synthetic text: a mixture of Zipf-distributed unigrams and short repeated
+motifs so the LM loss has learnable structure (tests assert loss decreases).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import frontends
+
+
+def make_batch_specs(model_cfg: ModelConfig, batch: int, seq: int
+                     ) -> Dict[str, Any]:
+    """Shape/dtype spec of one batch (consumed by dryrun input_specs)."""
+    if model_cfg.frontend == "audio_frames":
+        return {
+            "frames": ((batch, seq, model_cfg.d_model), np.float32),
+            "targets": ((batch, seq), np.int32),
+            "mask": ((batch, seq), np.bool_),
+        }
+    spec: Dict[str, Any] = {"tokens": ((batch, seq), np.int32)}
+    if model_cfg.frontend == "vision_patches":
+        spec["patches"] = ((batch, model_cfg.frontend_tokens,
+                            frontends.FRONTEND_DIM), np.float32)
+    return spec
+
+
+class DataPipeline:
+    def __init__(self, model_cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0, start_step: int = 0):
+        self.model_cfg = model_cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.step = start_step
+        # Zipf over a scaled-down effective vocab keeps smoke losses learnable
+        self._vocab = model_cfg.vocab_size
+
+    # ----- persistence -----
+    def state_dict(self) -> Dict[str, int]:
+        return {"seed": self.seed, "data_step": self.step}
+
+    @classmethod
+    def from_state(cls, model_cfg: ModelConfig, batch: int, seq: int,
+                   state: Dict[str, int]) -> "DataPipeline":
+        return cls(model_cfg, batch, seq, seed=state["seed"],
+                   start_step=state["data_step"])
+
+    # ----- generation -----
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+
+    def _tokens(self, rng: np.random.Generator, shape) -> np.ndarray:
+        v = self._vocab
+        z = rng.zipf(1.3, size=shape).astype(np.int64)
+        base = (z - 1) % v
+        # inject repeated motifs: with p=.5 copy the previous 8-token window
+        out = base.reshape(shape)
+        B, S = shape
+        for b in range(B):
+            if rng.random() < 0.5 and S >= 17:
+                start = int(rng.integers(8, S - 8))
+                out[b, start:start + 8] = out[b, start - 8:start]
+        return out.astype(np.int32)
+
+    def next(self) -> Dict[str, np.ndarray]:
+        rng = self._rng(self.step)
+        self.step += 1
+        cfg = self.model_cfg
+        if cfg.frontend == "audio_frames":
+            frames = rng.standard_normal(
+                (self.batch, self.seq, cfg.d_model)).astype(np.float32)
+            targets = self._tokens(rng, (self.batch, self.seq)) % cfg.vocab_size
+            mask = rng.random((self.batch, self.seq)) < 0.3
+            return {"frames": frames, "targets": targets, "mask": mask}
+        batch: Dict[str, np.ndarray] = {
+            "tokens": self._tokens(rng, (self.batch, self.seq))}
+        if cfg.frontend == "vision_patches":
+            batch["patches"] = rng.standard_normal(
+                (self.batch, cfg.frontend_tokens, frontends.FRONTEND_DIM)
+            ).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next()

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: split-KV (flash-decoding) attention for long-context
+decode (decode_32k / long_500k shapes).
+
+One query token vs. a (B, S, KVH, hd) cache. The sequence dimension is tiled
+(grid dim innermost, "arbitrary") with online-softmax scratch carried across
+tiles — so a 512k-token cache streams through VMEM in ``block_k`` chunks and
+the HBM traffic is exactly one pass over the valid prefix. ``cache_len`` is
+scalar-prefetched: tiles entirely beyond the valid prefix (or entirely below
+the sliding window) are skipped with ``pl.when`` — decode cost is
+proportional to the *live* context, not the allocated cache.
+
+The q head group for a KV head is processed as the matrix row dimension
+(GQA-natural layout): q block (n_rep, hd) × k block (hd, Bk) uses the MXU
+even at decode (n_rep up to 16 for our archs — paired with 128-wide k tiles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int, window: Optional[int], nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    clen = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_k
+    live = k_start < clen
+    if window is not None:
+        live = live & (k_start + block_k > clen - window)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (n_rep, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (Bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (Bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < clen
+        if window is not None:
+            valid = valid & (kpos >= clen - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    pl.when(live)(_body)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, cache_len,
+                         window: Optional[int] = None,
+                         block_k: int = 512) -> jnp.ndarray:
+    """q: (B, 1, H, hd); k_cache/v_cache: (B, S, KVH, hd);
+    cache_len: scalar or (B,). Returns (B, 1, H, hd)."""
+    B, S, KVH, hd = k_cache.shape
+    H = q.shape[2]
+    n_rep = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    block_k = min(block_k, S)
+    while S % block_k:
+        block_k //= 2
+    nk = S // block_k
+
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    # (B, KVH, n_rep, hd) — q head h belongs to kv group h // n_rep, so the
+    # head group becomes the q-block row dimension
+    qg = q[:, 0].reshape(B, KVH, n_rep, hd)
+    kt = jnp.moveaxis(k_cache, 2, 1)                         # (B,KVH,S,hd)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+
+    from repro.kernels import interpret_default
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
+                               window=window, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, hd),
+                         lambda b, g, ki, lens: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, g, ki, lens: (b, g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, g, ki, lens: (b, g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_rep, hd),
+                               lambda b, g, ki, lens: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((n_rep, hd), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, n_rep, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret_default(),
+        name="specee_decode_attention",
+    )
+    out = fn(clen, qg, kt, vt)                               # (B,KVH,n_rep,hd)
+    out = out.reshape(B, KVH * n_rep, hd)
+    return out[:, None].reshape(B, 1, H, hd)

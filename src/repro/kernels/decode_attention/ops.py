@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for split-KV decode attention."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("window", "block_k"))
+def decode_attention_raw(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, cache_len,
+                         window: Optional[int] = None,
+                         block_k: int = 512) -> jnp.ndarray:
+    return decode_attention_fwd(q, k_cache, v_cache, cache_len,
+                                window=window, block_k=block_k)
+
+
+def decode_attention(cfg, q, k_cache, v_cache, cache_len,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Model-layer adapter (matches ``attention.attend_decode`` signature)."""
+    return decode_attention_raw(q, k_cache, v_cache, cache_len, window=window)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for split-KV decode attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, cache_len,
+                         window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, 1, H, hd); k_cache/v_cache: (B, S, KVH, hd);
+    cache_len: scalar or (B,) int32. Returns (B, 1, H, hd)."""
+    B, S, KVH, hd = k_cache.shape
+    H = q.shape[2]
+    n_rep = H // KVH
+    if n_rep > 1:
+        k_cache = jnp.repeat(k_cache, n_rep, axis=2)
+        v_cache = jnp.repeat(v_cache, n_rep, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32)
+    logits = logits * scale
+    kpos = jnp.arange(S)[None, :]
+    clen = jnp.reshape(cache_len, (-1, 1))
+    valid = kpos < clen
+    if window is not None:
+        valid = valid & (kpos >= clen - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v_cache.dtype), v_cache)

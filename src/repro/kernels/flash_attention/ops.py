@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for blocked flash attention."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for blocked flash attention (causal / windowed / full)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, S, KVH, hd) — GQA repeated internally.
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    n_rep = H // KVH
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)

@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the fused predictor MLP."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.predictor_mlp.predictor_mlp import predictor_mlp_fused
+
+
+@jax.jit
+def predictor_mlp(x: jnp.ndarray, params) -> jnp.ndarray:
+    """x: (B, F); params: {"layers": [{w,b}, {w,b}]} (repro.core.predictor
+    layout, 2-layer case) -> (B,) exit probabilities."""
+    l1, l2 = params["layers"]
+    return predictor_mlp_fused(x, l1["w"], l1["b"], l2["w"], l2["b"])

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused 2-layer predictor MLP (T1, paper §4.3.2).
+
+The predictor is tiny ((12→512→1) ≈ 13 KB of weights) and memory-bound
+(paper §7.3.1) — the win on TPU is doing GEMM→ReLU→GEMV→sigmoid in ONE kernel
+so features make a single HBM→VMEM trip and intermediates never spill.
+
+Whole weight matrices fit VMEM trivially; the grid tiles only the row (batch)
+dimension. Feature dim F (=12) and the output column are padded to the
+128-lane boundary by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)                      # (Bt, F)
+    w1 = w1_ref[...].astype(jnp.float32)                    # (F, H)
+    b1 = b1_ref[...].astype(jnp.float32)                    # (1, H)
+    w2 = w2_ref[...].astype(jnp.float32)                    # (H, 1)
+    b2 = b2_ref[...].astype(jnp.float32)                    # (1, 1)
+    h = jnp.maximum(jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1,
+                    0.0)
+    out = jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2
+    out_ref[...] = jax.nn.sigmoid(out)                      # (Bt, 1)
+
+
+def predictor_mlp_fused(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+                        w2: jnp.ndarray, b2: jnp.ndarray,
+                        block_b: int = 256) -> jnp.ndarray:
+    """x: (B, F) -> (B,) exit probabilities."""
+    B, F = x.shape
+    H = w1.shape[1]
+    block_b = min(block_b, B)
+    # pad rows to a multiple of the block
+    pad_b = (-B) % block_b
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    nb = x.shape[0] // block_b
+
+    from repro.kernels import interpret_default
+    fn = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+            pl.BlockSpec((F, H), lambda i: (0, 0)),
+            pl.BlockSpec((1, H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
+        interpret=interpret_default(),
+        name="specee_predictor_mlp",
+    )
+    out = fn(x, w1, b1.reshape(1, H), w2, b2.reshape(1, 1))
+    return out[:B, 0]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused 2-layer predictor MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def predictor_mlp_ref(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+                      w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, F); w1: (F, H); b1: (H,); w2: (H, 1); b2: (1,) -> (B,) prob."""
+    h = jax.nn.relu(x.astype(jnp.float32) @ w1.astype(jnp.float32)
+                    + b1.astype(jnp.float32))
+    out = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return jax.nn.sigmoid(out[..., 0])

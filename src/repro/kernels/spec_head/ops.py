@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for the fused speculative LM head."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spec_head.spec_head import spec_head_logits
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def spec_head(hn: jnp.ndarray, lm_head: jnp.ndarray, spec_ids: jnp.ndarray,
+              block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused gather + k-GEMM + softmax.
+
+    hn: (B, D) final-normed hidden; lm_head: (D, V); spec_ids: (B, k) int32.
+    Returns (logits (B, k) fp32, local_probs (B, k) fp32).
+    """
+    logits = spec_head_logits(hn, lm_head, spec_ids, block_d=block_d)
+    return logits, jax.nn.softmax(logits, axis=-1)

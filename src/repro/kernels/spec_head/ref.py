@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the speculative LM head (gather + k-GEMM + softmax)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def spec_head_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                  spec_ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """hn: (B, D); lm_head: (D, V); spec_ids: (B, k) int32.
+
+    Returns (logits (B, k) fp32, local_probs (B, k) fp32).
+    """
+    cols = jnp.take(lm_head, spec_ids, axis=1)        # (D, B, k)
+    cols = jnp.moveaxis(cols, 1, 0)                   # (B, D, k)
+    logits = jnp.einsum("bd,bdk->bk", hn.astype(jnp.float32),
+                        cols.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    return logits, probs

@@ -1,0 +1,11 @@
+"""Public jit'd wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_fwd
+
+
+@jax.jit
+def ssd_chunk(xdt, cum, Bc, Cc):
+    return ssd_chunk_fwd(xdt, cum, Bc, Cc)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: SSD intra-chunk (diagonal-block) term (Mamba2 SSD)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xdt: jnp.ndarray, cum: jnp.ndarray, Bc: jnp.ndarray,
+                  Cc: jnp.ndarray) -> jnp.ndarray:
+    """One chunk's causal decay-attention.
+
+    xdt: (B, c, nh, hd) — dt-weighted inputs
+    cum: (B, c, nh)     — inclusive cumsum of A·dt
+    Bc:  (B, c, ds); Cc: (B, c, ds) — input/output matrices (head-shared)
+    Returns y_diag: (B, c, nh, hd) fp32:
+        y[t] = Σ_{s≤t} (C_t·B_s) · exp(cum[t]−cum[s]) · xdt[s]
+    """
+    c = xdt.shape[1]
+    rel = cum[:, :, None, :] - cum[:, None, :, :]            # (B,c,c,nh)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    M = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+    CB = jnp.einsum("bqd,bsd->bqs", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    W = CB[..., None] * M                                    # (B,c,c,nh)
+    return jnp.einsum("bqsh,bshp->bqhp", W, xdt.astype(jnp.float32))

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) cell
+on the production mesh and dump memory/cost/collective analysis.
+
+MUST be the process entry point (device count locks on first jax init):
+
+    REPRO_DRYRUN_DEVICES=256 python -m repro.launch.dryrun --arch llama2-7b \
+        --shape decode_32k --out out.json
+    REPRO_DRYRUN_DEVICES=512 python -m repro.launch.dryrun --multi-pod ...
+
+(512 placeholder CPU devices exist ONLY here; tests/benches see 1 device.)
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RunConfig, ShapeCell, applicable_shapes, shape_by_name
+from repro.configs import ARCHS, get_config
+from repro.core import engine as eng
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models.model import Model, ModelFlags, build_model
+from repro.train.loop import make_train_step
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(r"\b(f32|f16|bf16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+_BYTES = {"f32": 4, "s32": 4, "u32": 4, "f16": 2, "bf16": 2, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def step_fn_for(model: Model, run: RunConfig, cell: ShapeCell,
+                dense_decode: bool = False, data_extent: int = 16,
+                param_pspec=None):
+    if cell.kind == "train":
+        import dataclasses
+        # gradient accumulation: microbatches bound activation memory; each
+        # chunk keeps ≥1 row per data shard
+        mb = max(cell.global_batch // 16, data_extent)
+        tcfg = dataclasses.replace(run.train, global_batch=cell.global_batch,
+                                   seq_len=cell.seq_len, microbatch=mb)
+        return make_train_step(model, tcfg, param_pspec=param_pspec)
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, cache, _ = model.prefill(params, batch,
+                                             max_seq=cell.seq_len + 1)
+            if cache is None:        # encoder arch
+                return logits
+            return logits, cache
+        if not model.cfg.is_decoder():
+            def encoder_step(params, batch):
+                logits, _, _ = model.prefill(params, batch)
+                return logits
+            return encoder_step
+        return prefill_step
+    # decode: the SpecEE AR serve step (the paper's technique) or dense
+    if run.specee.enabled and not dense_decode:
+        def serve_step(params, sw, state):
+            token, new_state, info = eng.ar_decode_step(model, params, sw,
+                                                        state)
+            return token, new_state, info.exit_point
+        return serve_step
+
+    def dense_serve_step(params, sw, state):
+        token, new_state, info = eng.dense_decode_step(model, params, sw,
+                                                       state)
+        return token, new_state
+    return dense_serve_step
+
+
+_OP_RE = re.compile(r"=\s+(.*?)\s([a-z][a-z0-9\-]*)\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes of every collective op in post-SPMD HLO.
+
+    XLA emits loop bodies as separate computations and cost analysis counts
+    them ONCE, so we split collectives into ``entry_bytes`` (ENTRY %main,
+    executes once) and ``loop_bytes`` (non-entry computations — scan/while
+    bodies and their cond branches). The roofline scales loop_bytes by the
+    analytically-known trip count of the layer loop (EXPERIMENTS.md §Roofline
+    states the approximation: collectives nested in inner chunk loops are
+    counted at layer-loop multiplicity).
+    """
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    count: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    entry_bytes, loop_bytes = 0.0, 0.0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        if s.startswith("ENTRY "):
+            in_entry = True
+        elif s.startswith("%") and s.rstrip().endswith("{"):
+            in_entry = False
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op not in COLLECTIVE_OPS:
+            # async forms: count -start, skip -done (same payload)
+            base = op.replace("-start", "")
+            if base not in COLLECTIVE_OPS or op.endswith("-done"):
+                continue
+            op = base
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _BYTES[dt]
+        out[op] += total
+        count[op] += 1
+        if in_entry:
+            entry_bytes += total
+        else:
+            loop_bytes += total
+    out["total_bytes"] = sum(out[k] for k in COLLECTIVE_OPS)
+    out["entry_bytes"] = entry_bytes
+    out["loop_bytes"] = loop_bytes
+    out["counts"] = count  # type: ignore
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             flags: Optional[ModelFlags] = None, unroll: bool = False,
+             dense_decode: bool = False) -> Dict[str, Any]:
+    run = get_config(arch)
+    cell = shape_by_name(shape_name)
+    assert cell in applicable_shapes(run.model), \
+        f"{shape_name} not applicable to {arch} (see DESIGN.md §4)"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_extent = int(np.prod([v for k, v in mesh.shape.items()
+                               if k in ("pod", "data")]))
+    model = build_model(run, flags or ModelFlags(
+        remat="full" if cell.kind == "train" else "none", unroll=unroll,
+        act_batch_axes=("pod", "data") if multi_pod else "data",
+        act_batch_extent=data_extent,
+        # §Perf-confirmed default: pin the residual stream for dense-arch
+        # training (−75% collectives, +1.5-4 GB temp — fits for d ≤ 8192;
+        # MoE archs keep headroom for the gathered-token EP buffers)
+        act_pin_full=(cell.kind == "train" and run.model.moe is None
+                      and run.model.d_model <= 8192),
+        # wide models: smaller attention/CE chunks bound fp32 score tensors
+        chunk_size=256 if run.model.d_model >= 8192 else 512,
+        ce_chunk=256 if run.model.d_model >= 8192 else 512))
+    args, specs = input_specs(model, cell, mesh)
+    fn = step_fn_for(model, run, cell, dense_decode=dense_decode,
+                     data_extent=data_extent,
+                     param_pspec=specs[0] if cell.kind == "train" else None)
+    from repro.sharding.policies import named
+    in_shardings = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    # buffer donation: decode donates the state so the KV cache updates in
+    # place (the scan/while ping-pong otherwise doubles the 8 GB cache).
+    # Train donation measured WORSE on the CPU-XLA buffer accounting
+    # (params+opt aliasing blocked other reuse: +4..10 GB temp) — kept off.
+    donate = (2,) if cell.kind == "decode" else ()
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    units = sum(reps for _, reps in model.segments)
+    loop_scale = units
+    if cell.kind == "train":
+        mb = max(cell.global_batch // 16, data_extent)
+        loop_scale = units * max(cell.global_batch // mb, 1)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "loop_scale": loop_scale, "units": units,
+    }
+    # ---- memory ----
+    try:
+        ma = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not expose it
+        result["memory_error"] = str(e)
+    # analytic per-device argument bytes from the shardings
+    arg_bytes = 0
+    for leafspec, leaf in zip(
+            jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec)),
+            jax.tree_util.tree_leaves(args)):
+        shard = 1
+        for ax in jax.tree_util.tree_leaves(tuple(leafspec)):
+            if ax is not None:
+                shard *= mesh.shape[ax]
+        arg_bytes += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // max(shard, 1)
+    result["analytic_arg_bytes_per_device"] = arg_bytes
+    # ---- cost ----
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        result["cost"] = {k: float(v) for k, v in ca.items()
+                          if isinstance(v, (int, float)) and
+                          k in ("flops", "bytes accessed",
+                                "bytes accessed output", "optimal_seconds")}
+    except Exception as e:
+        result["cost_error"] = str(e)
+    # ---- collectives ----
+    try:
+        txt = compiled.as_text()
+        result["collectives"] = collective_bytes(txt)
+        from repro.launch.hlo_analysis import collective_totals
+        # trip-count-aware accounting; dynamic whiles (early-exit) bound by
+        # the full unit count
+        result["collectives_exact"] = collective_totals(txt,
+                                                        default_trip=units)
+        result["hlo_chars"] = len(txt)
+        del txt
+    except Exception as e:
+        result["collectives_error"] = str(e)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--assigned-only", action="store_true",
+                    help="skip the llama2 paper configs")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer loops (roofline-accurate FLOP counts)")
+    ap.add_argument("--dense-decode", action="store_true",
+                    help="lower the dense baseline serve step (no SpecEE)")
+    args = ap.parse_args()
+
+    archs = ([args.arch] if args.arch != "all" else
+             [a for a in ARCHS if not (args.assigned_only and
+                                       a.startswith("llama2"))])
+    results = []
+    for arch in archs:
+        run = get_config(arch)
+        cells = applicable_shapes(run.model)
+        names = ([args.shape] if args.shape != "all"
+                 else [c.name for c in cells])
+        for name in names:
+            if name not in [c.name for c in cells]:
+                print(f"SKIP {arch} {name} (inapplicable)", flush=True)
+                continue
+            print(f"=== {arch} × {name} × "
+                  f"{'2x16x16' if args.multi_pod else '16x16'} ===",
+                  flush=True)
+            try:
+                r = run_cell(arch, name, args.multi_pod, unroll=args.unroll,
+                             dense_decode=args.dense_decode)
+                print(json.dumps(
+                    {k: r.get(k) for k in ("compile_s", "memory",
+                                           "analytic_arg_bytes_per_device",
+                                           "cost")},
+                    default=str), flush=True)
+            except Exception as e:
+                r = {"arch": arch, "shape": name, "error": repr(e)}
+                print("FAILED:", repr(e), flush=True)
+            results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print("wrote", args.out)
+    bad = [r for r in results if "error" in r]
+    print(f"{len(results) - len(bad)}/{len(results)} cells compiled")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

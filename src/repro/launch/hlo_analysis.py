@@ -1,0 +1,154 @@
+"""Trip-count-aware collective analysis of post-SPMD HLO text.
+
+XLA's ``cost_analysis`` counts loop bodies once. This module rebuilds the
+computation call graph from ``compiled.as_text()`` and walks it from ENTRY,
+multiplying collective payload bytes by loop trip counts:
+
+* while loops lowered from ``lax.scan`` carry their trip count as an s32
+  constant inside the condition computation (compare against the iteration
+  counter) — parsed directly;
+* dynamic whiles (early-exit loops, pruned-attention fori with traced
+  bounds) have no constant — a caller-supplied ``default_trip`` (the layer
+  count = the full-depth upper bound) is used;
+* conditionals count BOTH branches (upper bound — SpecEE's verification
+  branch fires at most once per unit);
+* fusions/calls/reductions multiply by 1.
+
+The result is per-device collective bytes *per executed step*, the quantity
+the roofline's collective term needs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(
+    r"\b(f32|f16|bf16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+_BYTES = {"f32": 4, "s32": 4, "u32": 4, "f16": 2, "bf16": 2, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+_OP_RE = re.compile(r"=\s+(.*?)\s([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-{}, %]+?)\}?[,\s]")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _payload_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def parse_computations(txt: str) -> Tuple[Dict[str, Dict], Optional[str]]:
+    comps: Dict[str, Dict] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in txt.splitlines():
+        s = raw.strip()
+        m = _COMP_RE.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = {"coll": {}, "children": []}
+            if m.group(1):
+                entry = cur
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        c = comps[cur]
+        mw = _WHILE_RE.search(s)
+        if mw:
+            cond, body = mw.group(1), mw.group(2)
+            c["children"].append(("while", body, cond))
+            continue
+        # conditionals / calls / fusions
+        mb = re.search(r"branch_computations=\{([^}]*)\}", s)
+        if mb:
+            for b in mb.group(1).split(","):
+                c["children"].append(("call", b.strip().lstrip("%"), None))
+        else:
+            for key in ("calls=", "to_apply="):
+                i = s.find(key)
+                if i >= 0:
+                    name = re.match(r"%?([\w\.\-]+)", s[i + len(key):])
+                    if name:
+                        c["children"].append(("call", name.group(1), None))
+        mo = _OP_RE.search(s)
+        if mo:
+            op = mo.group(2)
+            base = op.replace("-start", "")
+            if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                c["coll"][base] = c["coll"].get(base, 0) + \
+                    _payload_bytes(mo.group(1))
+        # record constants for trip-count extraction
+        mc = _CONST_RE.search(s)
+        if mc:
+            c.setdefault("consts", []).append(int(mc.group(1)))
+    return comps, entry
+
+
+def trip_count(comps: Dict[str, Dict], cond: str,
+               default_trip: int) -> Tuple[int, bool]:
+    """Trip count of a while from its condition computation's s32 constant.
+    Returns (trips, known)."""
+    c = comps.get(cond, {})
+    consts = c.get("consts", [])
+    if len(consts) == 1:
+        return max(consts[0], 1), True
+    if consts:
+        return max(max(consts), 1), True
+    return default_trip, False
+
+
+def collective_totals(txt: str, default_trip: int = 1) -> Dict[str, Any]:
+    comps, entry = parse_computations(txt)
+    if entry is None:
+        return {"total_bytes": 0.0, "by_op": {}, "unknown_trips": 0}
+    totals: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    unknown = [0]
+
+    from functools import lru_cache
+
+    import sys
+    sys.setrecursionlimit(10000)
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, depth: int = 0) -> Dict[str, float]:
+        """Per-single-execution collective bytes of computation ``name``."""
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return {}
+        out = dict(c["coll"])
+        memo[name] = out  # pre-set (cycle guard)
+        for kind, child, cond in c["children"]:
+            sub = walk(child, depth + 1)
+            if kind == "while":
+                trips, known = trip_count(comps, cond, default_trip)
+                if not known:
+                    unknown[0] += 1
+                for k, v in sub.items():
+                    out[k] = out.get(k, 0.0) + v * trips
+            else:
+                for k, v in sub.items():
+                    out[k] = out.get(k, 0.0) + v
+        memo[name] = out
+        return out
+
+    top = walk(entry)
+    for k, v in top.items():
+        totals[k] = totals.get(k, 0.0) + v
+    return {"total_bytes": sum(totals.values()), "by_op": totals,
+            "unknown_trips": unknown[0]}

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+16×16 = 256 chips per v5e pod; the multi-pod mesh adds a leading 'pod' axis
+(2 pods = 512 chips for the dry-run; the same code scales the pod extent).
+Defined as functions — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devices[:n])
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    devices = jax.devices()[: data * model]
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+        devices=devices)

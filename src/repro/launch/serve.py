@@ -1,0 +1,65 @@
+"""Production serving launcher: continuous batching + SpecEE.
+
+Smoke usage (CPU):
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
+        --requests 8
+
+The full-scale path is the same engine jit'd against the production mesh
+(see launch/dryrun.py, which lowers exactly this serve step for every
+assigned architecture × decode shape).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--no-specee", action="store_true")
+    ap.add_argument("--trained", action="store_true",
+                    help="train draft+predictors first (slower start)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core import engine as eng
+    from repro.models.model import build_model
+    from repro.serving import ServingEngine
+
+    if args.trained:
+        from benchmarks.common import get_bundle
+        b = get_bundle(args.arch)
+        model, params, sw = b.model, b.params, b.sw
+        run = b.run
+    else:
+        run = get_config(args.arch).smoke()
+        model = build_model(run)
+        params = model.init(jax.random.PRNGKey(0))
+        sw = eng.init_specee(model, jax.random.PRNGKey(1))
+
+    engine = ServingEngine(model, params, sw, specee=not args.no_specee)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(rng.integers(0, run.model.vocab_size,
+                                   int(rng.integers(4, 16))),
+                      max_new_tokens=args.max_new)
+    t0 = time.perf_counter()
+    done = engine.run_to_completion()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s, specee={not args.no_specee})")
+    for r in done:
+        print(f"  req {r.uid}: {len(r.output)} tokens "
+              f"exits={sum(1 for e in r.exit_points if e < model.num_exit_points)}")
+
+
+if __name__ == "__main__":
+    main()

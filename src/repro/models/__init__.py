@@ -1,0 +1,5 @@
+"""Model zoo: dense GQA / MoE transformers, Mamba2 SSD, RG-LRU hybrid,
+encoder-only audio transformer, and modality frontend stubs.
+
+Public entry point: ``repro.models.model.build_model(run_config)``.
+"""

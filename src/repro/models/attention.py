@@ -1,0 +1,241 @@
+"""Attention blocks: GQA, causal / bidirectional / sliding-window, KV cache.
+
+Reference jnp implementations; the Pallas kernels in ``repro.kernels`` are
+drop-in replacements selected via ``repro.models.model.KernelFlags``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ModelConfig, kg: KeyGen) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    out_std = 1.0 / math.sqrt(cfg.num_heads * hd) / math.sqrt(2 * cfg.num_layers)
+    return {
+        "wq": common.init_linear(kg, d, cfg.num_heads * hd, cfg.use_bias),
+        "wk": common.init_linear(kg, d, cfg.num_kv_heads * hd, cfg.use_bias),
+        "wv": common.init_linear(kg, d, cfg.num_kv_heads * hd, cfg.use_bias),
+        "wo": common.init_linear(kg, cfg.num_heads * hd, d, cfg.use_bias,
+                                 std=out_std),
+    }
+
+
+def qkv(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+        positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> q (B,S,H,hd), k,v (B,S,KVH,hd), with RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = common.apply_linear(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = common.apply_linear(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = common.apply_linear(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.causal:  # decoder archs use RoPE; the encoder (hubert) is position-free here
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def kv_only(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+            positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K/V projections only — used for SpecEE KV propagation of skipped layers."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    k = common.apply_linear(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = common.apply_linear(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.causal:
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, KVH, hd) -> (B, S, KVH*n_rep, hd)."""
+    if n_rep == 1:
+        return x
+    B, S, KVH, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (B, S, KVH, n_rep, hd))
+    return x.reshape(B, S, KVH * n_rep, hd)
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, H, hd); mask: broadcastable to
+    (B, H, Sq, Sk) boolean (True = attend). Softmax in fp32.
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def causal_mask(Sq: int, Sk: int, q_offset: int = 0,
+                window: Optional[int] = None) -> jnp.ndarray:
+    """(1, 1, Sq, Sk) boolean mask; window = sliding-window size (None=global)."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def attend_full(cfg: ModelConfig, q, k, v,
+                window: Optional[int] = None) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill path)."""
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    S = q.shape[1]
+    mask = causal_mask(S, S, 0, window) if cfg.causal else None
+    return sdpa(q, k, v, mask)
+
+
+def attend_full_chunked(cfg: ModelConfig, q, k, v,
+                        window: Optional[int] = None,
+                        chunk: int = 512) -> jnp.ndarray:
+    """Memory-efficient exact attention: ``lax.scan`` over query chunks so the
+    peak logits tensor is (B, H, chunk, S) instead of (B, H, S, S).
+
+    This is the jnp analogue of the Pallas flash kernel used for HLO-level
+    dry-runs (the kernel itself only lowers on real TPUs). Keys are not
+    causally pruned per chunk (static shapes), costing ≤2× attention FLOPs
+    over the ideal — accounted for in EXPERIMENTS.md §Roofline.
+    """
+    B, S, H, hd = q.shape
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nq = S // chunk
+    qc = jnp.moveaxis(q.reshape(B, nq, chunk, H, hd), 1, 0)   # (nq,B,c,H,hd)
+
+    kpos = jnp.arange(S)[None, :]
+
+    def body(_, args):
+        i, qb = args
+        out = None
+        if cfg.causal:
+            qpos = i * chunk + jnp.arange(chunk)[:, None]
+            m = kpos <= qpos
+            if window is not None:
+                m = m & (kpos > qpos - window)
+            mask = m[None, None]                              # (1,1,c,S)
+        else:
+            mask = None
+        return None, sdpa(qb, k, v, mask)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def attend_full_chunked_pruned(cfg: ModelConfig, q, k, v,
+                               window: Optional[int] = None,
+                               chunk: int = 512) -> jnp.ndarray:
+    """Causally-PRUNED chunked attention (§Perf beyond-paper lever).
+
+    Like ``attend_full_chunked`` but the inner KV loop is a ``fori_loop``
+    whose upper bound depends on the query chunk (and lower bound on the
+    sliding window) — strictly-above-diagonal KV blocks are never computed,
+    recovering the ~2× causal FLOP saving that static-shape chunking wastes
+    (this is the jnp analogue of the Pallas kernel's ``pl.when`` block skip).
+    Online-softmax accumulation keeps it exact. Causal only.
+    """
+    assert cfg.causal
+    B, S, H, hd = q.shape
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nq = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+    qc = jnp.moveaxis(q.reshape(B, nq, chunk, H, hd), 1, 0)
+
+    def q_body(_, args):
+        i, qb = args                                   # qb: (B, c, H, hd)
+        qf = jnp.moveaxis(qb, 2, 1).astype(jnp.float32) * scale  # (B,H,c,hd)
+
+        def kv_step(j, carry):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+            kf = jnp.moveaxis(kb, 2, 1).astype(jnp.float32)
+            vf = jnp.moveaxis(vb, 2, 1).astype(jnp.float32)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+            qpos = i * chunk + jnp.arange(chunk)[:, None]
+            kpos = j * chunk + jnp.arange(chunk)[None, :]
+            mask = kpos <= qpos
+            if window is not None:
+                mask = mask & (kpos > qpos - window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+            return m_new, l, acc
+
+        m0 = jnp.full((B, H, chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, chunk, hd), jnp.float32)
+        lo = jnp.int32(0) if window is None else jnp.maximum(
+            0, (i * chunk - window) // chunk)
+        m, l, acc = jax.lax.fori_loop(lo, i + 1, kv_step, (m0, l0, a0))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        return None, jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,c,H,hd)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def attend_decode(cfg: ModelConfig, q, k_cache, v_cache, cache_len,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """One-step decode attention against a (B, S, KVH, hd) cache.
+
+    q: (B, 1, H, hd); cache_len: scalar or (B,) int32 — number of valid cache
+    slots (the current token's k/v must already be written at cache_len-1).
+
+    GQA is contracted with GROUPED einsums — the KV cache is never
+    repeat-materialized, so a sequence-sharded (split-KV) cache stays local:
+    softmax renormalization and the value contraction reduce over the shard
+    with scalar-sized collectives instead of gathering GBs of cache per layer
+    (measured in EXPERIMENTS.md §Perf).
+    """
+    B, _, H, hd = q.shape
+    KVH = k_cache.shape[2]
+    n_rep = H // KVH
+    S = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qg = q[:, 0].reshape(B, KVH, n_rep, hd)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache
+                        ).astype(jnp.float32) * scale      # (B,KVH,rep,S)
+    kpos = jnp.arange(S)[None, :]
+    clen = jnp.reshape(cache_len, (-1, 1))      # (1,1) scalar or (B,1)
+    valid = kpos < clen
+    if window is not None:
+        valid = valid & (kpos >= clen - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def out_proj(p: Params, attn_out: jnp.ndarray, pet=None) -> jnp.ndarray:
+    B, S, H, hd = attn_out.shape
+    return common.apply_linear(p["wo"], attn_out.reshape(B, S, H * hd),
+                               pet=pet)

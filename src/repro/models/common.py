@@ -1,0 +1,172 @@
+"""Shared layers/utilities for the functional model zoo (pure JAX, no flax)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, std: float = 0.02, dtype=jnp.float32):
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Split keys on demand: ``kg = KeyGen(key); w = init(kg(), ...)``."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": ones_init((dim,)), "bias": zeros_init((dim,))}
+    return {"scale": ones_init((dim,))}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                        # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / linear
+# ---------------------------------------------------------------------------
+def init_linear(kg: KeyGen, d_in: int, d_out: int, use_bias: bool,
+                std: Optional[float] = None) -> Params:
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": normal_init(kg(), (d_in, d_out), std)}
+    if use_bias:
+        p["b"] = zeros_init((d_out,))
+    return p
+
+
+def apply_linear(p: Params, x: jnp.ndarray, pet=None) -> jnp.ndarray:
+    """pet: preferred_element_type — §Perf lever: row-parallel projections
+    pass bf16 so the cross-shard partial-sum all-reduce moves 2 B/elem."""
+    if pet is not None:
+        y = jax.lax.dot_general(x, p["w"].astype(x.dtype),
+                                (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=pet).astype(x.dtype)
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, kg: KeyGen, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out_std = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.num_layers)
+    p: Params = {"wi": init_linear(kg, d, f, cfg.use_bias),
+                 "wo": init_linear(kg, f, d, cfg.use_bias, std=out_std)}
+    if cfg.gated_mlp:
+        p["wg"] = init_linear(kg, d, f, cfg.use_bias)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              pet=None) -> jnp.ndarray:
+    act = activation_fn(cfg.activation)
+    up = apply_linear(p["wi"], x)
+    if cfg.gated_mlp:
+        up = act(apply_linear(p["wg"], x)) * up
+    else:
+        up = act(up)
+    return apply_linear(p["wo"], up, pet=pet)  # row-parallel: psum dtype
+
+
+# ---------------------------------------------------------------------------
+# embeddings & head
+# ---------------------------------------------------------------------------
+def init_embedding(cfg: ModelConfig, kg: KeyGen) -> Params:
+    return {"tok": normal_init(kg(), (cfg.vocab_size, cfg.d_model), 0.02)}
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["tok"].astype(dtype)[tokens]
+
+
+def lm_head_weight(params: Params) -> jnp.ndarray:
+    """(d_model, vocab) — transposed embedding when tied."""
+    if "lm_head" in params:
+        return params["lm_head"]["w"]
+    return params["embed"]["tok"].T

@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (per assignment: the transformer backbone is the
+deliverable; frontends provide precomputed patch/frame embeddings).
+
+- vision_patches (internvl2): ``input_specs()`` supplies (B, P, d_frontend)
+  patch embeddings; a learned projection maps them to d_model and they are
+  prepended to the text token embeddings.
+- audio_frames (hubert): frames arrive already at d_model (the conv feature
+  extractor is the stub); a learned linear "feature projection" is applied.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+# frontend embedding width produced by the (stubbed) modality encoder
+FRONTEND_DIM = 1024
+
+
+def init_frontend(cfg: ModelConfig, kg: KeyGen) -> Optional[Params]:
+    if cfg.frontend == "vision_patches":
+        return {"proj": common.init_linear(kg, FRONTEND_DIM, cfg.d_model, True)}
+    if cfg.frontend == "audio_frames":
+        return {"proj": common.init_linear(kg, cfg.d_model, cfg.d_model, True)}
+    return None
+
+
+def apply_frontend(cfg: ModelConfig, p: Params, feats: jnp.ndarray,
+                   dtype) -> jnp.ndarray:
+    """feats: (B, T, FRONTEND_DIM|d_model) -> (B, T, d_model)."""
+    return common.apply_linear(p["proj"], feats.astype(dtype))
+
+
+def frontend_feature_dim(cfg: ModelConfig) -> int:
+    return FRONTEND_DIM if cfg.frontend == "vision_patches" else cfg.d_model

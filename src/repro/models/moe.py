@@ -1,0 +1,194 @@
+"""Mixture-of-Experts FFN with top-k routing (dbrx / qwen3-moe).
+
+Dense-compute formulation (every expert computes, outputs combined by router
+weights) for small/smoke paths, and a dispatch ("einsum MoE", Shazeer-style
+one-hot combine) formulation whose expert dimension shards cleanly over the
+mesh 'data' axis (expert parallelism) for the production path. Both are
+mathematically identical for top-k routing without capacity dropping.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+
+def init_moe(cfg: ModelConfig, kg: KeyGen) -> Params:
+    assert cfg.moe is not None
+    e = cfg.moe
+    d, f, E = cfg.d_model, e.expert_d_ff, e.num_experts
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.num_layers)
+    p: Params = {
+        "router": {"w": common.normal_init(kg(), (d, E), std_in)},
+        "wi": common.normal_init(kg(), (E, d, f), std_in),
+        "wo": common.normal_init(kg(), (E, f, d), std_out),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = common.normal_init(kg(), (E, d, f), std_in)
+    return p
+
+
+def router_probs(cfg: ModelConfig, p: Params,
+                 x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., D) -> (combine_weights (..., E), router_logits (..., E)).
+
+    Top-k selection with renormalized softmax over the selected experts.
+    one_hot-based combine keeps arbitrary leading batch dims (and their
+    shardings) intact.
+    """
+    e = cfg.moe
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    topv, topi = jax.lax.top_k(logits, e.num_experts_per_tok)       # (...,k)
+    gate = jax.nn.softmax(topv, axis=-1)
+    onehot = jax.nn.one_hot(topi, e.num_experts, dtype=gate.dtype)  # (...,k,E)
+    combine = jnp.einsum("...k,...ke->...e", gate, onehot)
+    return combine, logits
+
+
+def _pin_experts(t: jnp.ndarray, ep_axes, ep_extent: int) -> jnp.ndarray:
+    """Pin dim 0 (experts) of an intermediate to the EP mesh axes so GSPMD
+    computes each device's local experts over (gathered) tokens instead of
+    re-sharding the expert weights per chunk. Falls back to the 'data' axis
+    alone when E doesn't divide (pod×data) — EP stays within a pod."""
+    if ep_axes is None:
+        return t
+    if t.shape[0] % max(ep_extent, 1):
+        if (isinstance(ep_axes, tuple) and "data" in ep_axes
+                and t.shape[0] % 16 == 0):
+            ep_axes = "data"
+        else:
+            return t
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        t, P(ep_axes, *([P.UNCONSTRAINED] * (t.ndim - 1))))
+
+
+def _ep_quantized_gather(xc: jnp.ndarray, ep_axes) -> jnp.ndarray:
+    """§Perf beyond-paper lever: quantize tokens to int8 BEFORE the EP
+    all-gather. Pinning the int8 tensor to the gathered (batch-replicated)
+    layout forces GSPMD to move 1-byte payloads over the ICI instead of
+    bf16 — halving the dominant EP collective term. Dequantized immediately
+    after; per-token scales ride along (negligible bytes)."""
+    from jax.sharding import PartitionSpec as P
+    amax = jnp.max(jnp.abs(xc.astype(jnp.float32)), axis=-1) + 1e-8
+    scale = (amax / 127.0).astype(jnp.float32)                  # (B, Sc)
+    q = jnp.clip(jnp.round(xc.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    rest = [P.UNCONSTRAINED] * (q.ndim - 1)
+    q = jax.lax.with_sharding_constraint(q, P(None, *rest))     # gather int8
+    scale = jax.lax.with_sharding_constraint(
+        scale, P(None, *([P.UNCONSTRAINED] * (scale.ndim - 1))))
+    return (q.astype(jnp.float32) * scale[..., None]).astype(xc.dtype)
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              token_chunk: int = 4096, ep_axes=None,
+              ep_extent: int = 1,
+              ep_quant: bool = False,
+              bf16_reduce: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Einsum formulation: activations are projected through every expert and
+    combined with the (mostly-zero) combine weights. On a sharded mesh the
+    expert dimension E lives on the EP axis, so each device computes only its
+    local experts — the zero-weight math is free after SPMD partitioning of
+    the E dimension, and the combine turns into a reduce over EP.
+
+    The SEQUENCE dim is processed in ``token_chunk`` chunks (``lax.scan``) so
+    the all-expert activation tensor (E_local, B, Sc, F) stays HBM-bounded at
+    32k prefill; the batch dim is kept explicit through every einsum so its
+    'data' sharding survives (no reshape → no GSPMD all-gather).
+    """
+    B, S, D = x.shape
+    act = common.activation_fn(cfg.activation)
+
+    def ffn(xc):  # (B, Sc, D)
+        combine, logits = router_probs(cfg, p, xc)                  # (B,Sc,E)
+        combine = combine.astype(x.dtype)
+        if ep_quant and ep_axes is not None:
+            xc = _ep_quantized_gather(xc, ep_axes)
+        up = jnp.einsum("bsd,edf->ebsf", xc, p["wi"].astype(x.dtype))
+        up = _pin_experts(up, ep_axes, ep_extent)
+        if cfg.gated_mlp:
+            gate_h = jnp.einsum("bsd,edf->ebsf", xc, p["wg"].astype(x.dtype))
+            gate_h = _pin_experts(gate_h, ep_axes, ep_extent)
+            up = act(gate_h) * up
+        else:
+            up = act(up)
+        # weight the expert activations by the router BEFORE the down
+        # projection and contract E and F together — the (E, B, Sc, D)
+        # per-expert output tensor never materializes
+        up = up * jnp.moveaxis(combine, -1, 0)[..., None]           # (E,B,Sc,F)
+        up = _pin_experts(up, ep_axes, ep_extent)
+        # bf16_reduce: the E/F contraction's cross-device partial sums move
+        # bf16 on the ICI instead of f32 (local accumulation over at most
+        # E_local×F_local ≤ a few hundred terms — bounded error)
+        pet = jnp.bfloat16 if bf16_reduce else None
+        out = jnp.einsum("ebsf,efd->bsd", up, p["wo"].astype(x.dtype),
+                         preferred_element_type=pet).astype(x.dtype)
+        return out, load_balancing_loss(cfg, logits.reshape(-1,
+                                                            logits.shape[-1]))
+
+    if S <= token_chunk:
+        return ffn(x)
+
+    chunk = token_chunk
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    xc = jnp.moveaxis(x.reshape(B, nc, chunk, D), 1, 0)             # (nc,B,c,D)
+
+    def body(_, cx):
+        out, aux = ffn(cx)
+        return None, (out, aux)
+
+    _, (outs, auxs) = jax.lax.scan(body, None, xc)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, D)
+    return out, jnp.mean(auxs)
+
+
+def apply_moe_topk(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather-based top-k MoE: computes only the selected experts per token.
+
+    FLOP-proportional to k/E (the serving path for CPU benchmarks); identical
+    output to ``apply_moe``.
+    """
+    e = cfg.moe
+    B, S, D = x.shape
+    act = common.activation_fn(cfg.activation)
+    xt = x.reshape(B * S, D)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+    topv, topi = jax.lax.top_k(logits, e.num_experts_per_tok)
+    gate = jax.nn.softmax(topv, axis=-1).astype(x.dtype)            # (T, k)
+
+    wi = p["wi"].astype(x.dtype)[topi]                              # (T, k, D, F)
+    wo = p["wo"].astype(x.dtype)[topi]                              # (T, k, F, D)
+    up = jnp.einsum("td,tkdf->tkf", xt, wi)
+    if cfg.gated_mlp:
+        wg = p["wg"].astype(x.dtype)[topi]
+        up = act(jnp.einsum("td,tkdf->tkf", xt, wg)) * up
+    else:
+        up = act(up)
+    down = jnp.einsum("tkf,tkfd->tkd", up, wo)                      # (T, k, D)
+    out = jnp.einsum("tkd,tk->td", down, gate)
+    aux = load_balancing_loss(cfg, logits)
+    return out.reshape(B, S, D), aux
+
+
+def load_balancing_loss(cfg: ModelConfig, router_logits: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e f_e * p_e (f = fraction routed, p = mean prob)."""
+    e = cfg.moe
+    probs = jax.nn.softmax(router_logits, axis=-1)                  # (T, E)
+    _, topi = jax.lax.top_k(router_logits, e.num_experts_per_tok)
+    onehot = jax.nn.one_hot(topi, e.num_experts, dtype=jnp.float32)  # (T, k, E)
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)                   # (E,)
+    pm = jnp.mean(probs, axis=0)
+    return e.num_experts * jnp.sum(f * pm) * e.router_aux_loss_weight

@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin). [arXiv:2402.19427]
+
+Block: ln -> {gate branch: Linear+GeLU} x {x branch: Linear -> causal conv ->
+RG-LRU} -> out proj. The RG-LRU recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    log a_t = -c * softplus(Λ) * r_t        (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Sequence path uses ``jax.lax.associative_scan`` over the linear recurrence
+(h_t = a_t h_{t-1} + b_t) — the TPU-idiomatic log-depth formulation; decode
+path is the O(1) update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RGLRUConfig
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+_C = 8.0
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    r = cfg.rglru or RGLRUConfig()
+    return r.lru_width or cfg.d_model
+
+
+def init_rglru(cfg: ModelConfig, kg: KeyGen) -> Params:
+    r = cfg.rglru or RGLRUConfig()
+    d, w = cfg.d_model, lru_width(cfg)
+    std_d = 1.0 / math.sqrt(d)
+    std_w = 1.0 / math.sqrt(w)
+    out_std = std_w / math.sqrt(2 * cfg.num_layers)
+    # Λ init so that a^c ∈ ~(0.9, 0.999)
+    u = jax.random.uniform(kg(), (w,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))  # softplus^-1
+    return {
+        "wx": {"w": common.normal_init(kg(), (d, w), std_d)},      # x branch
+        "wy": {"w": common.normal_init(kg(), (d, w), std_d)},      # gate branch
+        "conv_w": common.normal_init(kg(), (r.conv_kernel, w),
+                                     1.0 / math.sqrt(r.conv_kernel)),
+        "conv_b": common.zeros_init((w,)),
+        "wa": {"w": common.normal_init(kg(), (w, w), std_w),
+               "b": common.zeros_init((w,))},
+        "wi": {"w": common.normal_init(kg(), (w, w), std_w),
+               "b": common.zeros_init((w,))},
+        "lam": lam,
+        "wo": {"w": common.normal_init(kg(), (w, d), out_std)},
+    }
+
+
+def _gates(p: Params, x: jnp.ndarray):
+    """x: (..., W) post-conv activations -> (log_a, b_t) of the recurrence."""
+    r = jax.nn.sigmoid(common.apply_linear(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(common.apply_linear(p["wi"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2 * log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a2, 1e-12, None)) * i * x.astype(jnp.float32)
+    return log_a, b
+
+
+def rglru_scan(p: Params, x: jnp.ndarray,
+               h0: jnp.ndarray | None = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, W) -> (h (B,S,W), h_final (B,W)) via associative scan."""
+    log_a, b = _gates(p, x)                                    # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the initial state into the first input
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), hh[:, -1, :]
+
+
+def rglru_step(p: Params, x_t: jnp.ndarray,
+               h: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x_t: (B, W); h: (B, W) -> (out, new_h)."""
+    log_a, b = _gates(p, x_t)
+    new_h = jnp.exp(log_a) * h.astype(jnp.float32) + b
+    return new_h.astype(x_t.dtype), new_h
+
+
+def rglru_block_seq(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                    h0=None, conv_carry_in=None):
+    """Full recurrent block over a sequence. x: (B,S,D) pre-normed.
+    Returns (out (B,S,D), h_final (B,W), conv_tail (B,K-1,W))."""
+    r = cfg.rglru or RGLRUConfig()
+    gate = jax.nn.gelu(common.apply_linear(p["wy"], x))
+    xb = common.apply_linear(p["wx"], x)
+    xc = _conv_seq(p, xb, conv_carry_in)
+    h_seq, h_final = rglru_scan(p, xc, h0)
+    out = common.apply_linear(p["wo"], h_seq * gate)
+    K = r.conv_kernel
+    conv_tail = xb[:, -(K - 1):, :] if xb.shape[1] >= K - 1 else None
+    return out, h_final, conv_tail
+
+
+def _conv_seq(p: Params, xb: jnp.ndarray, carry=None) -> jnp.ndarray:
+    K = p["conv_w"].shape[0]
+    if carry is None:
+        pad = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([carry.astype(xb.dtype), xb], axis=1)
+    w = p["conv_w"].astype(xb.dtype)
+    out = sum(pad[:, i:i + xb.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + p["conv_b"].astype(xb.dtype)[None, None, :]
+
+
+def rglru_block_step(cfg: ModelConfig, p: Params, x_t: jnp.ndarray,
+                     h: jnp.ndarray, conv_state: jnp.ndarray):
+    """Single-token recurrent block. x_t: (B,D) pre-normed.
+    conv_state: (B, K-1, W). Returns (out (B,D), new_h, new_conv_state)."""
+    gate = jax.nn.gelu(common.apply_linear(p["wy"], x_t))
+    xb = common.apply_linear(p["wx"], x_t)                     # (B, W)
+    window = jnp.concatenate([conv_state.astype(xb.dtype), xb[:, None, :]], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(xb.dtype)) \
+        + p["conv_b"].astype(xb.dtype)[None, :]
+    h_out, new_h = rglru_step(p, xc, h)
+    out = common.apply_linear(p["wo"], h_out * gate)
+    return out, new_h, window[:, 1:, :]

@@ -1,0 +1,229 @@
+"""Mamba2 — SSD (state-space duality) block. [arXiv:2405.21060]
+
+Sequence path uses the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk linear state recurrence via ``lax.scan`` over chunks); decode path
+is the O(1) recurrent update. A Pallas kernel for the intra-chunk term lives in
+``repro.kernels.ssd_chunk`` (optional drop-in).
+
+Layout conventions (single B/C group, as in mamba2-130m):
+  x  : (B, S, nh, hd)      — inner activations split into SSM heads
+  dt : (B, S, nh)          — per-head timestep (softplus(dt + bias))
+  A  : (nh,)               — negative decay rate (−exp(A_log))
+  Bm : (B, S, ds)          — input matrix  (shared across heads)
+  Cm : (B, S, ds)          — output matrix (shared across heads)
+  state: (B, nh, hd, ds)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models import common
+from repro.models.common import KeyGen, Params
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return di, nh, s.head_dim, s.d_state
+
+
+def init_ssd(cfg: ModelConfig, kg: KeyGen) -> Params:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    di, nh, hd, ds = dims(cfg)
+    conv_ch = di + 2 * ds
+    # in_proj emits [z (di), x (di), B (ds), C (ds), dt (nh)]
+    out_dim = 2 * di + 2 * ds + nh
+    p: Params = {
+        "in_proj": {"w": common.normal_init(kg(), (d, out_dim), 1.0 / math.sqrt(d))},
+        "conv_w": common.normal_init(kg(), (s.conv_kernel, conv_ch),
+                                     1.0 / math.sqrt(s.conv_kernel)),
+        "conv_b": common.zeros_init((conv_ch,)),
+        # A in [-1, -e]: A_log ~ log(Uniform[1, 16])
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": common.ones_init((nh,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(
+                kg(), (nh,), minval=math.log(1e-3), maxval=math.log(1e-1))),
+                1e-4, None))),
+        "norm": {"scale": common.ones_init((di,))},
+        "out_proj": {"w": common.normal_init(
+            kg(), (di, d), 1.0 / math.sqrt(di) / math.sqrt(2 * cfg.num_layers))},
+    }
+    return p
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, nh, hd, ds = dims(cfg)
+    z, xBC_dt = jnp.split(proj, [di], axis=-1)
+    xBC, dt = jnp.split(xBC_dt, [di + 2 * ds], axis=-1)
+    return z, xBC, dt  # (…, di), (…, di+2ds), (…, nh)
+
+
+def _gated_rmsnorm(p: Params, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Mamba2 out-norm: RMSNorm(x * silu(z))."""
+    y = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + 1e-6) *
+            p["norm"]["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD over a sequence
+# ---------------------------------------------------------------------------
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                initial_state: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds)).
+
+    Discretization: a_t = exp(A * dt_t); input contribution dt_t * x_t ⊗ B_t.
+    y_t = C_t · h_t (+ no D here; D is added by the caller).
+    """
+    B, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    S_orig = S
+    if S % chunk != 0:
+        # pad with dt=0 tokens: a=exp(A*0)=1 and input dt*x=0, so padding is a
+        # no-op on the state; padded outputs are sliced off below.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+
+    xc = x.reshape(B, nc, chunk, nh, hd)
+    dtc = dt.reshape(B, nc, chunk, nh)
+    Bc = Bm.reshape(B, nc, chunk, ds)
+    Cc = Cm.reshape(B, nc, chunk, ds)
+
+    # log decay within chunk: L[t] = cumsum of A*dt up to t (inclusive)
+    ladt = A[None, None, None, :] * dtc                       # (B,nc,Q,nh)
+    cum = jnp.cumsum(ladt, axis=2)                            # inclusive
+    # intra-chunk ("diagonal block") term: attention-like with decay kernel
+    # M[t, s] = exp(cum[t] - cum[s]) for s <= t  (decay from s+1..t)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    # scores: C_t · B_s (shared across heads)
+    CB = jnp.einsum("bcqd,bcsd->bcqs", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    W = CB[..., None] * M                                      # (B,nc,Q,Q,nh)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]              # (B,nc,Q,nh,hd)
+    y_diag = jnp.einsum("bcqsh,bcshp->bcqhp", W, xdt)
+
+    # chunk-level states: contribution of chunk c to the state after chunk c
+    # decay from position s to end of chunk: exp(cum[-1] - cum[s])
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,Q,nh)
+    states = jnp.einsum("bcsd,bcsh,bcshp->bchpd",
+                        Bc.astype(jnp.float32), dec_to_end, xdt)  # (B,nc,nh,hd,ds)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,nh)
+
+    # inter-chunk recurrence over nc (scan)
+    h0 = (jnp.zeros((B, nh, hd, ds), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        st, dec = inp                                          # (B,nh,hd,ds),(B,nh)
+        h_out = h                                              # state BEFORE chunk
+        h_next = h * dec[:, :, None, None] + st
+        return h_next, h_out
+
+    states_t = jnp.moveaxis(states, 1, 0)                      # (nc,B,nh,hd,ds)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,B,nh)
+    h_final, h_before = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_before = jnp.moveaxis(h_before, 0, 1)                    # (B,nc,nh,hd,ds)
+
+    # inter-chunk ("off-diagonal") output: y += C_t · (decay(0..t) * h_before)
+    dec_from_start = jnp.exp(cum)                              # (B,nc,Q,nh)
+    y_off = jnp.einsum("bcqd,bchpd,bcqh->bcqhp",
+                       Cc.astype(jnp.float32), h_before, dec_from_start)
+
+    y = (y_diag + y_off).reshape(B, S, nh, hd)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent_step(x, dt, A, Bm, Cm, state):
+    """Single-token update. x: (B,nh,hd); dt: (B,nh); Bm,Cm: (B,ds);
+    state: (B,nh,hd,ds) -> (y (B,nh,hd), new_state)."""
+    a = jnp.exp(A[None, :] * dt)                               # (B,nh)
+    xdt = x.astype(jnp.float32) * dt[..., None]                # (B,nh,hd)
+    new_state = (state.astype(jnp.float32) * a[:, :, None, None]
+                 + xdt[..., None] * Bm[:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpd,bd->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full block (norm -> in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+def conv1d_seq(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over sequence. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def conv1d_step(w: jnp.ndarray, b: jnp.ndarray, x_t: jnp.ndarray,
+                conv_state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x_t: (B, C); conv_state: (B, K-1, C) holding the previous K-1 inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
+    new_state = window[:, 1:, :]
+    return out, new_state
+
+
+def ssd_block_seq(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  initial_state=None, conv_carry=None):
+    """Full-sequence SSD block (train/prefill). x: (B,S,D) (pre-normed outside)."""
+    s = cfg.ssm or SSMConfig()
+    di, nh, hd, ds = dims(cfg)
+    proj = common.apply_linear(p["in_proj"], x)                # (B,S,2di+2ds+nh)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = jax.nn.silu(conv1d_seq(p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), xBC))
+    xin, Bm, Cm = jnp.split(xBC, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])          # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                   # (nh,)
+    xh = xin.reshape(*xin.shape[:-1], nh, hd)
+    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk_size, initial_state)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:-1], di)
+    y = _gated_rmsnorm(p, y, z)
+    out = common.apply_linear(p["out_proj"], y)
+    # conv carry for seamless decode continuation
+    K = (cfg.ssm or SSMConfig()).conv_kernel
+    proj_tail = proj[:, -(K - 1):, di:di + di + 2 * ds] if x.shape[1] >= K - 1 else None
+    return out, h_final, proj_tail
+
+
+def ssd_block_step(cfg: ModelConfig, p: Params, x_t: jnp.ndarray,
+                   state: jnp.ndarray, conv_state: jnp.ndarray):
+    """Single-token SSD block. x_t: (B, D) pre-normed; returns (out (B,D),
+    new_state, new_conv_state)."""
+    di, nh, hd, ds = dims(cfg)
+    proj = common.apply_linear(p["in_proj"], x_t)              # (B, 2di+2ds+nh)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, new_conv = conv1d_step(p["conv_w"].astype(x_t.dtype),
+                                p["conv_b"].astype(x_t.dtype), xBC, conv_state)
+    xBC = jax.nn.silu(xBC)
+    xin, Bm, Cm = jnp.split(xBC, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(-1, nh, hd)
+    y, new_state = ssd_recurrent_step(xh, dt, A, Bm, Cm, state)
+    y = y + xh * p["D"].astype(x_t.dtype)[None, :, None]
+    y = y.reshape(-1, di)
+    y = _gated_rmsnorm(p, y, z)
+    return common.apply_linear(p["out_proj"], y), new_state, new_conv

@@ -1,0 +1,38 @@
+"""LR schedules: cosine, constant, and WSD (Warmup-Stable-Decay — MiniCPM's
+schedule, arXiv:2404.06395 §4: warmup → long stable plateau → short decay)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    peak = cfg.learning_rate
+    warm = max(cfg.warmup_steps, 1)
+    total = max(cfg.steps, warm + 1)
+
+    if cfg.schedule == "constant":
+        def sched(step):
+            s = jnp.asarray(step, jnp.float32)
+            return peak * jnp.minimum(1.0, s / warm)
+    elif cfg.schedule == "wsd":
+        decay_start = int(total * 0.9)  # MiniCPM: final ~10% decays
+
+        def sched(step):
+            s = jnp.asarray(step, jnp.float32)
+            warmup = jnp.minimum(1.0, s / warm)
+            frac = jnp.clip((s - decay_start) / max(total - decay_start, 1),
+                            0.0, 1.0)
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+            return peak * warmup * decay
+    else:  # cosine
+        def sched(step):
+            s = jnp.asarray(step, jnp.float32)
+            warmup = jnp.minimum(1.0, s / warm)
+            frac = jnp.clip((s - warm) / max(total - warm, 1), 0.0, 1.0)
+            decay = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac))
+            return peak * warmup * decay
+    return sched

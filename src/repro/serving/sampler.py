@@ -1,0 +1,25 @@
+"""Token samplers (greedy / temperature / top-k) for the serving engine.
+
+SpecEE's verification is defined on greedy argmax (the paper evaluates greedy
+and few-shot scoring); sampling modes apply to the dense path and to the
+final-layer logits of non-exited rows.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, prng: jnp.ndarray, temperature: float = 0.0,
+           top_k: Optional[int] = None) -> jnp.ndarray:
+    """logits: (B, V) fp32 -> (B,) int32 tokens."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k is not None:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(prng, logits, axis=-1).astype(jnp.int32)

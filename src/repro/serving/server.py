@@ -1,0 +1,163 @@
+"""Continuous-batching serving engine with SpecEE as the decode fast path.
+
+vLLM-style slot model adapted to JAX's static shapes:
+  * ``max_batch`` slots share one batched DecodeState (caches are (B, S, …));
+  * arriving requests are prefilled individually (batch-1 prefill — the
+    expensive, variable-length op) and their rows are *inserted* into the
+    batched state; per-row cache lengths make ragged prompts first-class;
+  * every engine tick runs ONE batched ``ar_decode_step`` (SpecEE) or dense
+    step for all live slots; finished rows (EOS / max_new) retire and free
+    their slot — exactly the iteration-level scheduling of Orca/vLLM;
+  * inactive slots are masked; their compute is wasted but bounded (the
+    standard TPU static-batch trade-off; see DESIGN.md §3).
+
+This engine is the PC/cloud *logic* deliverable; the multi-pod path lowers
+the same ``ar_decode_step`` through pjit (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RunConfig
+from repro.core import engine as eng
+from repro.core import scheduler as sched_lib
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    exit_points: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _insert_row(big, small, row: int, batch: int):
+    """Insert batch-1 pytree ``small`` as row ``row`` of batched ``big``."""
+    def one(b, s):
+        axis = None
+        for i, (db, ds) in enumerate(zip(b.shape, s.shape)):
+            if db == batch and ds == 1:
+                axis = i
+                break
+        if axis is None and b.shape == s.shape:
+            return b  # batch-independent leaf (e.g. PRNG key): keep
+        assert axis is not None, f"no batch axis: {b.shape} vs {s.shape}"
+        idx = [slice(None)] * b.ndim
+        idx[axis] = row
+        src = jnp.squeeze(s, axis=axis)
+        return b.at[tuple(idx)].set(src.astype(b.dtype))
+    return jax.tree_util.tree_map(one, big, small)
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, sw: eng.SpecEEWeights,
+                 specee: bool = True, prng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.sw = sw
+        self.specee = specee and model.run.specee.enabled
+        self.serve_cfg = model.run.serve
+        B = self.serve_cfg.max_batch
+        S = self.serve_cfg.max_seq_len
+        self.B, self.S = B, S
+        self.slots: List[Optional[Request]] = [None] * B
+        self.remaining = np.zeros(B, np.int64)
+        self.pending: List[Request] = []
+        self._state = self._empty_state()
+        self._active = np.zeros(B, bool)
+        self._step_jit = jax.jit(self._step_fn)
+        self._uid = itertools.count()
+
+    # ----- state plumbing -----
+    def _empty_state(self) -> eng.DecodeState:
+        m, B, S = self.model, self.B, self.S
+        from repro.core import draft as draft_lib
+        from repro.models.common import dtype_of
+        cache = m.empty_cache(B, S)
+        dcache = draft_lib.draft_cache(m.cfg, B, S, dtype_of(m.cfg.dtype))
+        return eng.DecodeState(
+            cache=cache, draft_cache=dcache,
+            sched=sched_lib.init_state(B, m.run.specee),
+            last_token=jnp.zeros((B,), jnp.int32),
+            h_last=jnp.zeros((B, m.cfg.d_model),
+                             dtype_of(m.cfg.dtype)),
+            prng=jax.random.PRNGKey(0))
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_token: Optional[int] = None) -> Request:
+        req = Request(uid=next(self._uid), prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_token=eos_token)
+        self.pending.append(req)
+        return req
+
+    # ----- admission: batch-1 prefill, insert into slot -----
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.slots[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            tokens = jnp.asarray(req.prompt[None, :])       # (1, T)
+            first, st1 = eng.init_decode_state(
+                self.model, self.params, self.sw, {"tokens": tokens},
+                max_seq=self.S)
+            self._state = eng.DecodeState(*[
+                _insert_row(big, small, slot, self.B)
+                for big, small in zip(self._state, st1)])
+            req.output.append(int(first[0]))
+            self.slots[slot] = req
+            self.remaining[slot] = req.max_new_tokens - 1
+            self._active[slot] = True
+
+    # ----- one batched decode tick -----
+    def _step_fn(self, params, sw, state):
+        if self.specee:
+            return eng.ar_decode_step(self.model, params, sw, state)
+        return eng.dense_decode_step(self.model, params, sw, state)
+
+    def step(self) -> List[Request]:
+        """Admit, decode one token for all live slots, retire finished.
+        Returns the list of requests completed this tick."""
+        self._admit()
+        if not self._active.any():
+            return []
+        token, new_state, info = self._step_jit(self.params, self.sw,
+                                                self._state)
+        self._state = new_state
+        token_h = np.asarray(token)
+        exit_h = np.asarray(info.exit_point)
+        finished: List[Request] = []
+        for slot in range(self.B):
+            req = self.slots[slot]
+            if req is None or not self._active[slot]:
+                continue
+            tok = int(token_h[slot])
+            req.output.append(tok)
+            req.exit_points.append(int(exit_h[slot]))
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or (req.eos_token is not None
+                                             and tok == req.eos_token):
+                req.done = True
+                finished.append(req)
+                self.slots[slot] = None
+                self._active[slot] = False
+        return finished
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.pending and not self._active.any():
+                break
+        return done

@@ -1,0 +1,2 @@
+from repro.sharding.policies import (batch_specs, cache_specs, named,
+                                     param_specs, specee_specs, state_specs)

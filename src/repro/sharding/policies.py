@@ -1,0 +1,297 @@
+"""Sharding policies: logical roles -> PartitionSpec, divisibility-aware.
+
+Policies (ShardingConfig.policy):
+  tp_dp   — serving, ≤30 GB-bf16 archs: weights TP over 'model', replicated
+            over 'data'/'pod'; batch over ('pod','data').
+  tp2d    — serving, big archs (command-r-plus, dbrx, qwen3, llama2-70b):
+            2-D weight sharding — TP dim over 'model' AND the other matrix
+            dim over 'data' so 100B+ weights fit 16 GB HBM chips.
+  fsdp_tp — training (all archs): the tp_dp layout plus ZeRO-3: every
+            remaining unsharded weight dim shards over 'data'; optimizer
+            state inherits the parameter spec; batch over ('pod','data').
+
+The Megatron roles: column-parallel = {wq, wk, wv, mlp-in/gate, router,
+expert-in}, row-parallel = {wo, mlp-down, expert-down}, vocab-parallel =
+{embedding, lm_head}. MoE expert stacks additionally shard the expert dim
+over 'data' (EP). Any dim that does not divide its mesh extent falls back to
+replicated (e.g. minicpm's odd 122753 vocab).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import RunConfig
+from repro.models.model import Model
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Return axes if dim divides their product, else None (replicate)."""
+    return axes if axes is not None and dim % _axes_size(mesh, axes) == 0 \
+        else None
+
+
+def _data_axes(mesh: Mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+class _Rules:
+    """Path-string driven spec assignment for one (mesh, policy)."""
+
+    def __init__(self, mesh: Mesh, policy: str):
+        self.mesh = mesh
+        self.policy = policy
+        self.data = _data_axes(mesh)
+
+    def _wrap(self, path: str, spec: P, leaf) -> P:
+        """Stacked layer leaves carry a leading (reps,) dim -> prepend None."""
+        if "segments" in path and len(spec) < np.ndim(leaf):
+            return P(*((None,) + tuple(spec)))
+        return spec
+
+    def _second(self, dim: int):
+        """The non-TP matrix dim: 'data' for tp2d/fsdp_tp if it divides."""
+        if self.policy in ("tp2d", "fsdp_tp"):
+            return _fit(self.mesh, dim, self.data)
+        return None
+
+    def param_spec(self, path: str, leaf) -> P:
+        mesh = self.mesh
+        shape = np.shape(leaf)
+        m = "model"
+
+        def col(din, dout):  # column-parallel (D_in, D_out-TP)
+            return P(self._second(din), _fit(mesh, dout, m))
+
+        def row(din, dout):  # row-parallel (D_in-TP, D_out)
+            return P(_fit(mesh, din, m), self._second(dout))
+
+        if path.endswith("embed/tok"):
+            V, D = shape[-2:]
+            v_ax = _fit(mesh, V, m)
+            # odd vocabs (minicpm, internvl2): shard D over model instead;
+            # never shard the embedding D over 'data' — the gather output
+            # would drag activations away from batch sharding
+            d_ax = None if v_ax is not None else _fit(mesh, D, m)
+            if self.policy == "fsdp_tp" and v_ax is None and d_ax is None:
+                v_ax = _fit(mesh, V, self.data)
+            return P(v_ax, d_ax)
+        if "lm_head" in path:
+            D, V = shape[-2:]
+            return P(self._second(D), _fit(mesh, V, m))
+        # --- MoE expert stacks: (E, din, dout), EP over data ---
+        # EP stays WITHIN a pod (pure DP across pods): when E doesn't divide
+        # (pod×data) — dbrx's 16 experts on the 2×16×16 mesh — fall back to
+        # the single 'data' axis rather than replicating 130B of experts
+        if "moe" in path:
+            def e_ax(E):
+                return _fit(mesh, E, self.data) or _fit(mesh, E, "data")
+            if path.endswith("router/w"):
+                return self._wrap(path, P(None, None), leaf)
+            if any(path.endswith(s) for s in ("moe/wi", "moe/wg")):
+                E, D, F = shape[-3:]
+                return self._wrap(
+                    path, P(e_ax(E), None, _fit(mesh, F, m)), leaf)
+            if path.endswith("moe/wo"):
+                E, F, D = shape[-3:]
+                return self._wrap(
+                    path, P(e_ax(E), _fit(mesh, F, m), None), leaf)
+        # --- attention ---
+        if path.endswith(("wq/w", "wk/w", "wv/w")):
+            din, dout = shape[-2:]
+            return self._wrap(path, col(din, dout), leaf)
+        if path.endswith("attn/wo/w") or path.endswith("wo/w"):
+            din, dout = shape[-2:]
+            return self._wrap(path, row(din, dout), leaf)
+        for name in ("wq/b", "wk/b", "wv/b"):
+            if path.endswith(name):
+                return self._wrap(path, P(_fit(mesh, shape[-1], m)), leaf)
+        # --- dense MLP ---
+        for name in ("mlp/wi/w", "mlp/wg/w"):
+            if path.endswith(name):
+                din, dout = shape[-2:]
+                return self._wrap(path, col(din, dout), leaf)
+        if path.endswith("mlp/wo/w"):
+            din, dout = shape[-2:]
+            return self._wrap(path, row(din, dout), leaf)
+        for name in ("mlp/wi/b", "mlp/wg/b"):
+            if path.endswith(name):
+                return self._wrap(path, P(_fit(mesh, shape[-1], m)), leaf)
+        # --- RG-LRU ---
+        for name in ("rec/wx/w", "rec/wy/w"):
+            if path.endswith(name):
+                din, dout = shape[-2:]
+                return self._wrap(path, col(din, dout), leaf)
+        if path.endswith("rec/wo/w"):
+            din, dout = shape[-2:]
+            return self._wrap(path, row(din, dout), leaf)
+        for name in ("rec/wa/w", "rec/wi/w"):
+            if path.endswith(name):
+                # (W, W) gate matrices: TP the output dim
+                din, dout = shape[-2:]
+                return self._wrap(path, col(din, dout), leaf)
+        for name in ("rec/wa/b", "rec/wi/b", "rec/lam", "rec/conv_w",
+                     "rec/conv_b"):
+            if path.endswith(name):
+                return self._wrap(path, P(*([None] * (np.ndim(leaf) - 2)),
+                                          _fit(mesh, shape[-1], m))
+                                  if np.ndim(leaf) >= 1 else P(), leaf)
+        # --- SSD (mamba2) ---
+        if path.endswith("ssd/in_proj/w"):
+            din, dout = shape[-2:]
+            return self._wrap(path, col(din, dout), leaf)
+        if path.endswith("ssd/out_proj/w"):
+            din, dout = shape[-2:]
+            return self._wrap(path, row(din, dout), leaf)
+        # everything else (norms, small vectors, conv kernels, frontend):
+        # replicate; fsdp shards the largest dim over data if it divides
+        if self.policy == "fsdp_tp" and np.ndim(leaf) >= 1:
+            dims = [None] * np.ndim(leaf)
+            core = int(np.argmax(shape))
+            if "segments" in path and np.ndim(leaf) > 1 and core == 0:
+                core = 1 + int(np.argmax(shape[1:]))
+            ax = _fit(self.mesh, shape[core], self.data)
+            if ax is not None and shape[core] >= 1024:
+                dims[core] = ax
+            return P(*dims)
+        return P(*([None] * np.ndim(leaf)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _map_with_paths(tree, fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(_path_str(path), leaf) for path, leaf in flat])
+
+
+def param_specs(model: Model, mesh: Mesh, policy: str, params_shape) -> Any:
+    """PartitionSpec pytree for model parameters (shapes from eval_shape)."""
+    rules = _Rules(mesh, policy)
+    return _map_with_paths(params_shape,
+                           lambda p, l: rules.param_spec(p, l))
+
+
+def state_specs(mesh: Mesh, policy: str, param_spec_tree, opt_shape) -> Any:
+    """Optimizer state: m/v inherit the parameter spec; step replicated."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(),
+                      m=param_spec_tree, v=param_spec_tree)
+
+
+def batch_specs(model: Model, mesh: Mesh, batch_shape,
+                seq_shard: bool = True) -> Any:
+    """Input batch: batch dim over ('pod','data'); sequence dim over 'model'
+    (Megatron-style sequence parallelism — the residual stream then lives
+    sharded over TP, cutting per-device activation memory by the TP degree;
+    GSPMD inserts the all-gather before attention / reduce-scatter after)."""
+    data = _data_axes(mesh)
+
+    def one(path, leaf):
+        shape = np.shape(leaf)
+        nd = np.ndim(leaf)
+        ax = _fit(mesh, shape[0], data)
+        # fall back to the single 'data' axis if (pod×data) doesn't divide
+        if ax is None and not isinstance(data, str):
+            ax = _fit(mesh, shape[0], "data")
+        dims: List[Any] = [ax] + [None] * (nd - 1)
+        if seq_shard and nd >= 2 and shape[1] >= 1024:
+            dims[1] = _fit(mesh, shape[1], "model")
+        return P(*dims)
+
+    return _map_with_paths(batch_shape, one)
+
+
+def cache_specs(model: Model, mesh: Mesh, policy: str, cache_shape,
+                kv_seq_shard: bool = True) -> Any:
+    """KV/state caches.
+
+    Attention k/v: (reps, B, S, KVH, hd): B over data; then the first of
+    {KVH, hd, S} that divides 'model' (S only if kv_seq_shard — the
+    flash-decoding split-KV layout). Recurrent/SSM states: B over data, the
+    widest state dim over 'model'.
+    """
+    data = _data_axes(mesh)
+
+    def one(path, leaf):
+        shape = np.shape(leaf)
+        nd = np.ndim(leaf)
+        if path.endswith("len"):
+            return P()
+        if nd == 0:
+            return P()
+        if path.endswith("/k") or path.endswith("/v"):
+            has_reps = "segments" in path and nd == 5
+            off = 1 if has_reps else 0  # (B, S, KVH, hd) core
+            B, S, KVH, hd = shape[off:off + 4]
+            dims: List[Any] = [None] * nd
+            dims[off] = _fit(mesh, B, data) or _fit(mesh, B, "data")
+            if _fit(mesh, KVH, "model"):
+                dims[off + 2] = "model"
+            elif kv_seq_shard and _fit(mesh, S, "model"):
+                # GQA with kv_heads < TP degree: shard the SEQUENCE dim —
+                # flash-decoding split-KV. Attention contracts hd locally,
+                # softmax renormalization costs a scalar-sized AR instead of
+                # gathering GBs of head_dim-sharded cache per layer
+                dims[off + 1] = "model"
+            elif _fit(mesh, hd, "model"):
+                dims[off + 3] = "model"
+            return P(*dims)
+        # recurrent / conv / ssm states: (reps?, B, ...)
+        off = 1 if ("segments" in path and nd >= 3) else 0
+        dims = [None] * nd
+        if nd > off:
+            dims[off] = _fit(mesh, shape[off], data) or _fit(mesh, shape[off],
+                                                             "data")
+        # widest trailing dim over model
+        if nd > off + 1:
+            tail = int(np.argmax(shape[off + 1:])) + off + 1
+            if _fit(mesh, shape[tail], "model") and shape[tail] >= 128:
+                dims[tail] = "model"
+        return P(*dims)
+
+    return _map_with_paths(cache_shape, one)
+
+
+def specee_specs(model: Model, mesh: Mesh, policy: str, sw_shape) -> Any:
+    """SpecEE weights: draft layer shards like a TP block; predictors and the
+    offline mask are tiny -> replicated."""
+    rules = _Rules(mesh, policy if policy != "fsdp_tp" else "tp_dp")
+
+    def one(path, leaf):
+        if "draft" in path:
+            # draft blocks reuse attention/mlp naming -> same rules, but no
+            # leading stacked dim
+            spec = rules.param_spec(path, leaf)
+            return spec
+        return P(*([None] * np.ndim(leaf)))
+
+    return _map_with_paths(sw_shape, one)
+
+
+def named(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

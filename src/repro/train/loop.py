@@ -1,0 +1,155 @@
+"""Training loop: step builder (grad accumulation, remat via ModelFlags,
+schedule) + fault-tolerant host loop (checkpoint/restart, stragglers,
+preemption)."""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import RunConfig, TrainConfig
+from repro.data import DataPipeline
+from repro.models.model import Model
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.optim.adamw import AdamWState
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+
+
+def make_train_step(model: Model, cfg: TrainConfig, param_pspec=None
+                    ) -> Callable[[Any, AdamWState, Dict[str, jnp.ndarray]],
+                                  Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]]:
+    """Builds the (jit-able) train step. Supports gradient accumulation over
+    ``cfg.microbatch``-sized chunks via ``lax.scan`` (memory-bounded) when
+    microbatch > 0.
+
+    param_pspec: optional PartitionSpec pytree congruent with params — pins
+    the gradient-accumulator scan carry to the parameter sharding (otherwise
+    GSPMD materializes FULL fp32 weight gradients inside the loop: 1.5 GB per
+    matrix on command-r-plus)."""
+    sched = make_schedule(cfg)
+
+    def _pin(tree):
+        if param_pspec is None:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            tree, param_pspec)
+
+    def loss_fn(params, batch):
+        loss, aux = model.train_loss(params, batch)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if cfg.microbatch and cfg.microbatch > 0:
+            some = jax.tree_util.tree_leaves(batch)[0]
+            B = some.shape[0]
+            mb = cfg.microbatch
+            assert B % mb == 0, f"batch {B} % microbatch {mb}"
+            nm = B // mb
+            batch_r = jax.tree_util.tree_map(
+                lambda x: x.reshape((nm, mb) + x.shape[1:]), batch)
+
+            def acc(carry, chunk):
+                gsum, lsum = carry
+                (loss, aux), g = grad_fn(params, chunk)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (_pin(gsum), lsum + loss), None
+
+            zero = _pin(jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params))
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, jnp.float32(0.0)),
+                                           batch_r)
+            grads = jax.tree_util.tree_map(lambda g: g / nm, gsum)
+            loss = lsum / nm
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+        lr = sched(opt_state.step)
+        params, opt_state, stats = adamw_update(cfg, params, grads, opt_state,
+                                                lr)
+        stats = dict(stats, loss=loss, lr=lr)
+        return params, opt_state, stats
+
+    return train_step
+
+
+class TrainLoop:
+    """Host-side loop: data, jit'd step, checkpoints, fault handling."""
+
+    def __init__(self, model: Model, run: RunConfig, params,
+                 ckpt_dir: Optional[str] = None, host_id: int = 0):
+        self.model = model
+        self.run = run
+        self.cfg = run.train
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.step_fn = jax.jit(make_train_step(model, self.cfg))
+        self.pipeline = DataPipeline(model.cfg, self.cfg.global_batch,
+                                     self.cfg.seq_len, seed=self.cfg.seed)
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=self.cfg.keep_checkpoints)
+                     if ckpt_dir else None)
+        self.monitor = StragglerMonitor()
+        self.guard = PreemptionGuard()
+        self.host_id = host_id
+        self.step = 0
+        self.history: list = []
+
+    # ----- fault tolerance -----
+    def try_restore(self) -> bool:
+        if self.ckpt is None:
+            return False
+        out = self.ckpt.restore_latest(
+            {"params": self.params, "opt": self.opt_state})
+        if out is None:
+            return False
+        step, tree, extra = out
+        self.params = tree["params"]
+        self.opt_state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(self.opt_state),
+            jax.tree_util.tree_leaves(tree["opt"]))
+        self.step = step
+        self.pipeline = DataPipeline.from_state(
+            self.model.cfg, self.cfg.global_batch, self.cfg.seq_len,
+            extra["data"])
+        return True
+
+    def save(self) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"data": self.pipeline.state_dict()})
+
+    # ----- main loop -----
+    def run_steps(self, n: Optional[int] = None) -> Dict[str, float]:
+        n = n if n is not None else self.cfg.steps
+        last = {}
+        for _ in range(n):
+            batch = {k: jnp.asarray(v) for k, v in self.pipeline.next().items()}
+            t0 = time.perf_counter()
+            self.params, self.opt_state, stats = self.step_fn(
+                self.params, self.opt_state, batch)
+            stats = {k: float(v) for k, v in stats.items()}
+            dt = time.perf_counter() - t0
+            self.monitor.record(self.host_id, dt)
+            self.step += 1
+            stats["step_time"] = dt
+            self.history.append(stats)
+            last = stats
+            if self.ckpt and self.step % self.cfg.checkpoint_every == 0:
+                self.save()
+            if self.guard.should_save():
+                self.save()
+                if self.ckpt:
+                    self.ckpt.wait()
+                break
+        if self.ckpt:
+            self.ckpt.wait()
+        return last

@@ -1,0 +1,78 @@
+"""Config registry, parameter counts, and shape-cell applicability."""
+import pytest
+
+from repro.config import applicable_shapes, shape_by_name, SHAPES
+from repro.configs import ARCHS, get_config
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("llama2")]
+
+
+def test_all_archs_load():
+    for a in ARCHS:
+        run = get_config(a)
+        assert run.model.name == a
+        assert run.model.num_layers == len(run.model.blocks())
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("dbrx-132b", 125e9, 140e9),
+    ("qwen3-moe-235b-a22b", 220e9, 245e9),
+    ("deepseek-7b", 6.5e9, 7.5e9),
+    ("minicpm-2b", 2.3e9, 3.0e9),
+    ("command-r-plus-104b", 100e9, 112e9),
+    ("starcoder2-15b", 14e9, 17e9),
+    ("internvl2-26b", 18e9, 22e9),   # LM backbone only (vision is a stub)
+    ("hubert-xlarge", 0.9e9, 1.1e9),
+    ("recurrentgemma-9b", 8.5e9, 11.5e9),
+    ("mamba2-130m", 0.11e9, 0.15e9),
+    ("llama2-7b", 6.5e9, 7.0e9),
+    ("llama2-70b", 65e9, 72e9),
+])
+def test_param_counts(arch, lo, hi):
+    n = get_config(arch).model.param_count()
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    m = get_config("qwen3-moe-235b-a22b").model
+    # A22B: ~22B active
+    assert 15e9 <= m.active_param_count() <= 26e9
+    d = get_config("dbrx-132b").model
+    assert 30e9 <= d.active_param_count() <= 45e9
+
+
+def test_shape_skips():
+    # encoder-only: no decode shapes
+    hub = get_config("hubert-xlarge").model
+    names = [s.name for s in applicable_shapes(hub)]
+    assert names == ["train_4k", "prefill_32k"]
+    # full attention: no long_500k
+    for a in ("deepseek-7b", "dbrx-132b", "command-r-plus-104b"):
+        names = [s.name for s in applicable_shapes(get_config(a).model)]
+        assert "long_500k" not in names
+        assert "decode_32k" in names
+    # sub-quadratic: long_500k runs
+    for a in ("mamba2-130m", "recurrentgemma-9b"):
+        names = [s.name for s in applicable_shapes(get_config(a).model)]
+        assert "long_500k" in names
+
+
+def test_total_cell_count():
+    cells = sum(len(applicable_shapes(get_config(a).model)) for a in ASSIGNED)
+    assert cells == 31  # 10 train + 10 prefill + 9 decode + 2 long (DESIGN §4)
+
+
+def test_smoke_reduction():
+    for a in ARCHS:
+        sm = get_config(a).smoke().model
+        assert sm.param_count() < 5e6
+        assert sm.d_model == 128
+        # family preserved
+        assert sm.family == get_config(a).model.family
+
+
+def test_shape_lookup():
+    assert shape_by_name("train_4k").global_batch == 256
+    assert shape_by_name("long_500k").seq_len == 524288
+    with pytest.raises(KeyError):
+        shape_by_name("nope")

@@ -1,0 +1,196 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret mode on CPU) + hypothesis
+shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.spec_head.ops import spec_head
+from repro.kernels.spec_head.ref import spec_head_ref
+from repro.kernels.predictor_mlp.predictor_mlp import predictor_mlp_fused
+from repro.kernels.predictor_mlp.ops import predictor_mlp
+from repro.kernels.predictor_mlp.ref import predictor_mlp_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.ops import decode_attention_raw
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+# ---------------- spec_head ----------------
+@pytest.mark.parametrize("B,D,V,k", [(4, 256, 512, 4), (1, 128, 32, 4),
+                                     (7, 384, 1001, 5)])
+def test_spec_head_allclose(B, D, V, k):
+    hn = jax.random.normal(jax.random.PRNGKey(0), (B, D))
+    W = jax.random.normal(jax.random.PRNGKey(1), (D, V)) * 0.05
+    ids = jax.random.randint(jax.random.PRNGKey(2), (B, k), 0, V)
+    lg, pr = spec_head(hn, W, ids)
+    lgr, prr = spec_head_ref(hn, W, ids)
+    np.testing.assert_allclose(lg, lgr, atol=1e-5)
+    np.testing.assert_allclose(pr, prr, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(B=st.integers(1, 6), D=st.sampled_from([128, 256, 320]),
+       V=st.integers(16, 600), k=st.integers(2, 6),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_spec_head_hypothesis(B, D, V, k, dtype):
+    hn = jax.random.normal(jax.random.PRNGKey(3), (B, D), dtype)
+    W = (jax.random.normal(jax.random.PRNGKey(4), (D, V)) * 0.05).astype(dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(5), (B, k), 0, V)
+    lg, _ = spec_head(hn, W, ids)
+    lgr, _ = spec_head_ref(hn, W, ids)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(lg, lgr, atol=tol, rtol=tol)
+
+
+# ---------------- predictor_mlp ----------------
+def test_predictor_mlp_allclose():
+    x = jax.random.normal(jax.random.PRNGKey(0), (37, 12))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (12, 64)) * 0.3
+    b1 = jax.random.normal(jax.random.PRNGKey(2), (64,)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(3), (64, 1)) * 0.3
+    b2 = jnp.zeros((1,))
+    got = predictor_mlp_fused(x, w1, b1, w2, b2)
+    ref = predictor_mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_predictor_mlp_matches_core_predictor():
+    """Kernel output == repro.core.predictor.apply_predictor (2-layer case)."""
+    from repro.config import SpecEEConfig
+    from repro.core import predictor as pred_lib
+    spec = SpecEEConfig(predictor_hidden=64)
+    p = pred_lib.init_predictor(spec, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, spec.feature_dim()))
+    ref = pred_lib.apply_predictor(p, x)
+    got = predictor_mlp(x, p)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(B=st.integers(1, 300), F=st.sampled_from([12, 15]),
+       H=st.sampled_from([32, 512]))
+def test_predictor_mlp_hypothesis(B, F, H):
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, F))
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (F, H)) * 0.2
+    b1 = jnp.zeros((H,))
+    w2 = jax.random.normal(jax.random.PRNGKey(6), (H, 1)) * 0.2
+    b2 = jnp.ones((1,)) * 0.1
+    np.testing.assert_allclose(predictor_mlp_fused(x, w1, b1, w2, b2),
+                               predictor_mlp_ref(x, w1, b1, w2, b2),
+                               atol=1e-6)
+
+
+# ---------------- flash attention ----------------
+@pytest.mark.parametrize("B,S,H,KVH,hd,causal,window", [
+    (2, 64, 4, 2, 32, True, None),
+    (1, 128, 4, 1, 16, True, 32),
+    (2, 32, 2, 2, 64, False, None),
+    (1, 96, 8, 4, 32, True, None),
+])
+def test_flash_attention_allclose(B, S, H, KVH, hd, causal, window):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, hd))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, ref, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(S=st.sampled_from([32, 48, 64]), H=st.sampled_from([2, 4]),
+       rep=st.sampled_from([1, 2]), hd=st.sampled_from([16, 32]),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_flash_attention_hypothesis(S, H, rep, hd, dtype):
+    KVH = H // rep if H % rep == 0 else H
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, S, KVH, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, S, KVH, hd), dtype)
+    got = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got.astype(np.float32),
+                               ref.astype(np.float32), atol=tol, rtol=tol)
+
+
+# ---------------- decode attention ----------------
+@pytest.mark.parametrize("B,S,H,KVH,hd,window", [
+    (2, 128, 8, 2, 32, None),
+    (1, 256, 4, 1, 64, None),
+    (2, 64, 4, 4, 32, 16),
+])
+def test_decode_attention_allclose(B, S, H, KVH, hd, window):
+    clen = jnp.asarray(np.random.default_rng(0).integers(1, S, B), jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, hd))
+    got = decode_attention_raw(q, k, v, clen, window=window, block_k=32)
+    ref = decode_attention_ref(q, k, v, clen, window=window)
+    np.testing.assert_allclose(got, ref, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(B=st.integers(1, 4), S=st.sampled_from([64, 128]),
+       KVH=st.sampled_from([1, 2, 4]), rep=st.sampled_from([1, 2, 4]),
+       clen_frac=st.floats(0.1, 1.0))
+def test_decode_attention_hypothesis(B, S, KVH, rep, clen_frac):
+    H, hd = KVH * rep, 32
+    clen = max(1, int(S * clen_frac))
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, 1, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(7), (B, S, KVH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(8), (B, S, KVH, hd))
+    got = decode_attention_raw(q, k, v, clen, block_k=32)
+    ref = decode_attention_ref(q, k, v, clen)
+    np.testing.assert_allclose(got, ref, atol=2e-5)
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel == the model's attend_decode on a real cache layout."""
+    from repro.configs import get_config
+    from repro.models import attention as attn
+    run = get_config("llama2-70b").smoke()  # GQA smoke
+    cfg = run.model
+    B, S = 2, 64
+    hd = cfg.resolved_head_dim()
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, cfg.num_heads, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.num_kv_heads, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.num_kv_heads, hd))
+    clen = jnp.array([40, 17], jnp.int32)
+    ref = attn.attend_decode(cfg, q, k, v, clen)
+    got = decode_attention_raw(q, k, v, clen, block_k=16)
+    np.testing.assert_allclose(got, ref, atol=2e-5)
+
+
+# ---------------- ssd_chunk ----------------
+@pytest.mark.parametrize("B,c,nh,hd,ds", [(2, 32, 4, 32, 16),
+                                          (1, 64, 24, 64, 128)])
+def test_ssd_chunk_allclose(B, c, nh, hd, ds):
+    from repro.kernels.ssd_chunk.ops import ssd_chunk
+    from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+    k = jax.random.split(jax.random.PRNGKey(0), 4)
+    xdt = jax.random.normal(k[0], (B, c, nh, hd))
+    cum = -jnp.cumsum(jax.random.uniform(k[1], (B, c, nh)), axis=1)
+    Bc = jax.random.normal(k[2], (B, c, ds))
+    Cc = jax.random.normal(k[3], (B, c, ds))
+    np.testing.assert_allclose(ssd_chunk(xdt, cum, Bc, Cc),
+                               ssd_chunk_ref(xdt, cum, Bc, Cc), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(B=st.integers(1, 3), c=st.sampled_from([16, 32]),
+       nh=st.sampled_from([2, 8]), hd=st.sampled_from([16, 64]),
+       ds=st.sampled_from([16, 64]))
+def test_ssd_chunk_hypothesis(B, c, nh, hd, ds):
+    from repro.kernels.ssd_chunk.ops import ssd_chunk
+    from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+    k = jax.random.split(jax.random.PRNGKey(1), 4)
+    xdt = jax.random.normal(k[0], (B, c, nh, hd))
+    cum = -jnp.cumsum(jax.random.uniform(k[1], (B, c, nh)), axis=1)
+    Bc = jax.random.normal(k[2], (B, c, ds))
+    Cc = jax.random.normal(k[3], (B, c, ds))
+    np.testing.assert_allclose(ssd_chunk(xdt, cum, Bc, Cc),
+                               ssd_chunk_ref(xdt, cum, Bc, Cc), atol=1e-4)

@@ -1,0 +1,155 @@
+"""Per-arch smoke tests (deliverable f): reduced config of the same family,
+one forward/train step on CPU, output shapes + no NaNs; plus the decode
+equivalence invariant that the whole serving stack rests on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import DataPipeline
+from repro.models.model import build_model, segments_of
+from repro.models import frontends
+
+
+def make_batch(run, B=2, S=16, key=0):
+    cfg = run.model
+    rng = np.random.default_rng(key)
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": jnp.asarray(rng.standard_normal((B, S, cfg.d_model)),
+                                  jnp.float32),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32),
+            "mask": jnp.asarray(rng.random((B, S)) < 0.4)}
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_tokens,
+                                 frontends.FRONTEND_DIM)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    run = get_config(arch).smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(run)
+    loss, aux = m.train_loss(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+
+    logits, cache, extras = m.prefill(params, batch, max_seq=24)
+    if run.model.is_decoder():
+        assert logits.shape == (2, run.model.vocab_size)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        lg2, cache2 = m.decode_step(params, tok, cache)
+        assert lg2.shape == (2, run.model.vocab_size)
+        assert jnp.isfinite(lg2).all()
+        assert int(cache2["len"][0]) == int(cache["len"][0]) + 1
+    else:
+        assert logits.shape[-1] == run.model.vocab_size
+        assert jnp.isfinite(logits).all()
+
+    # one optimizer step decreases nothing catastrophic (finite grads)
+    from repro.train.loop import make_train_step
+    from repro.optim import adamw_init
+    import dataclasses
+    step = make_train_step(m, dataclasses.replace(run.train, steps=2))
+    opt = adamw_init(params)
+    p2, opt2, stats = jax.jit(step)(params, opt, batch)
+    assert jnp.isfinite(stats["loss"])
+    assert jnp.isfinite(stats["grad_norm"])
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "dbrx-132b", "mamba2-130m",
+                                  "recurrentgemma-9b", "starcoder2-15b",
+                                  "qwen3-moe-235b-a22b"])
+def test_decode_matches_full_forward(arch):
+    """prefill+decode_step must reproduce teacher-forced full-forward logits."""
+    run = get_config(arch).smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S, T = 2, 12, 6
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                run.model.vocab_size)
+    h = m.embed(params, tokens)
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    hf, _, _ = m.forward_hidden(params, h, pos)
+    full_logits = m.logits(params, hf)
+    logits, cache, _ = m.prefill(params, {"tokens": tokens[:, :T]},
+                                 max_seq=S + 2)
+    np.testing.assert_allclose(logits, full_logits[:, T - 1], atol=2e-4)
+    for t in range(T, S):
+        logits, cache = m.decode_step(params, tokens[:, t], cache)
+        np.testing.assert_allclose(logits, full_logits[:, t], atol=2e-4,
+                                   err_msg=f"{arch} step {t}")
+
+
+def test_segments_decomposition():
+    assert segments_of(["attention"] * 7) == [(("attention",), 7)]
+    assert segments_of(["ssd"] * 3) == [(("ssd",), 3)]
+    pat = ["rglru", "rglru", "local_attention"] * 12 + ["rglru", "rglru"]
+    assert segments_of(pat) == [(("rglru", "rglru", "local_attention"), 12),
+                                (("rglru",), 2)]
+    # recompose invariance
+    segs = segments_of(pat)
+    flat = [k for unit, reps in segs for _ in range(reps) for k in unit]
+    assert flat == pat
+
+
+def test_chunked_attention_equals_naive():
+    from repro.models import attention as attn
+    run = get_config("starcoder2-15b").smoke()
+    cfg = run.model
+    B, S = 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0),
+                          (B, S, cfg.num_heads, cfg.resolved_head_dim()))
+    k = jax.random.normal(jax.random.PRNGKey(1),
+                          (B, S, cfg.num_kv_heads, cfg.resolved_head_dim()))
+    v = jax.random.normal(jax.random.PRNGKey(2),
+                          (B, S, cfg.num_kv_heads, cfg.resolved_head_dim()))
+    a = attn.attend_full(cfg, q, k, v)
+    b = attn.attend_full_chunked(cfg, q, k, v, chunk=16)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    # windowed
+    a = attn.attend_full(cfg, q, k, v, window=8)
+    b = attn.attend_full_chunked(cfg, q, k, v, window=8, chunk=16)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_chunked_ce_matches_direct():
+    run = get_config("llama2-7b").smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 40
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, S, run.model.d_model))
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                             run.model.vocab_size)
+    direct = m._ce_loss(params, h, tgt, chunk=S)  # single chunk == direct
+    # force the chunked path by tiny chunk
+    chunked = m._ce_loss.__wrapped__(m, params, h, tgt, 16) \
+        if hasattr(m._ce_loss, "__wrapped__") else m._ce_loss(params, h, tgt,
+                                                              chunk=16)
+    np.testing.assert_allclose(direct, chunked, rtol=1e-5)
+
+
+def test_int8_kv_cache_close_to_fp():
+    """§Perf beyond-paper lever: int8 KV cache keeps greedy decode faithful."""
+    from repro.models.model import ModelFlags
+    run = get_config("llama2-7b").smoke()
+    m0 = build_model(run)
+    m8 = build_model(run, ModelFlags(kv_quant=True))
+    params = m0.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                run.model.vocab_size)
+    l0, c0, _ = m0.prefill(params, {"tokens": tokens}, max_seq=16)
+    l8, c8, _ = m8.prefill(params, {"tokens": tokens}, max_seq=16)
+    tok = jnp.argmax(l0, -1).astype(jnp.int32)
+    for _ in range(4):
+        l0, c0 = m0.decode_step(params, tok, c0)
+        l8, c8 = m8.decode_step(params, tok, c8)
+        assert float(jnp.max(jnp.abs(l0 - l8))) < 0.2
+        tok = jnp.argmax(l0, -1).astype(jnp.int32)

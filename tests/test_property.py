@@ -1,0 +1,115 @@
+"""Hypothesis property tests over system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SpecEEConfig
+from repro.core import scheduler as sched_lib
+from repro.core.tree import TreeSpec
+from repro.models.model import segments_of
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+KINDS = ["attention", "rglru", "ssd", "local_attention"]
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.sampled_from(KINDS), min_size=1, max_size=40))
+def test_segments_recompose(blocks):
+    """segments_of is a lossless decomposition: units×reps re-concatenate to
+    the original pattern, and units are non-empty."""
+    segs = segments_of(blocks)
+    flat = [k for unit, reps in segs for _ in range(reps) for k in unit]
+    assert flat == blocks
+    assert all(reps >= 1 and len(unit) >= 1 for unit, reps in segs)
+
+
+@settings(**SETTINGS)
+@given(E=st.integers(4, 64), window=st.integers(1, 8),
+       radius=st.integers(0, 4),
+       exits=st.lists(st.integers(0, 63), min_size=0, max_size=12),
+       frac=st.floats(0.05, 1.0))
+def test_scheduler_invariants(E, window, radius, exits, frac):
+    """Active set ⊇ offline top-set ∪ (±radius of queued exits); bounded by E."""
+    spec = SpecEEConfig(online_window=window, online_radius=radius,
+                        offline_top_frac=frac)
+    counts = jnp.asarray(np.random.default_rng(0).random(E), jnp.float32)
+    offline = sched_lib.offline_mask_from_counts(counts, spec)
+    assert int(offline.sum()) == max(1, round(frac * E))
+    stt = sched_lib.init_state(1, spec)
+    for e in exits:
+        stt = sched_lib.update(stt, jnp.array([min(e, E - 1)]))
+    am = sched_lib.active_mask(stt, offline, spec, E)[0]
+    # superset of offline
+    assert bool(jnp.all(am | ~offline))
+    # superset of the last `window` exits' neighbourhoods
+    recent = [min(e, E - 1) for e in exits][-window:]
+    for e in recent:
+        for j in range(max(0, e - radius), min(E, e + radius + 1)):
+            assert bool(am[j]), (e, j)
+    # queue length bounded
+    assert int((stt["queue"][0] >= 0).sum()) <= window
+
+
+@settings(**SETTINGS)
+@given(depth=st.integers(1, 3), branch=st.integers(2, 4))
+def test_tree_invariants(depth, branch):
+    t = TreeSpec(depth=depth, branch=branch)
+    # node count and path count
+    assert t.num_nodes == sum(branch ** l for l in range(depth + 1))
+    assert t.path_nodes.shape == (branch ** depth, depth + 1)
+    # levels consistent with parents
+    for n in range(1, t.num_nodes):
+        assert t.levels[n] == t.levels[t.parents[n]] + 1
+    # ancestor mask is a partial order (transitive, antisymmetric off-diag)
+    am = t.ancestor_mask
+    assert (am @ am <= am * t.num_nodes).all()  # transitivity (bool algebra)
+    assert not (am & am.T & ~np.eye(t.num_nodes, dtype=bool)).any()
+
+
+@settings(**SETTINGS)
+@given(B=st.integers(1, 4), N=st.integers(2, 8), k=st.integers(2, 5),
+       seed=st.integers(0, 99))
+def test_hyper_token_merge_cannikin(B, N, k, seed):
+    """Merged path features are elementwise ≤ every member node's features
+    (Cannikin: the weakest node gates the path)."""
+    from repro.core import features as feat_lib
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.standard_normal((B, N, 3 * k)), jnp.float32)
+    probs = jnp.asarray(rng.random((B, N, k)), jnp.float32)
+    depth = min(3, N)
+    path = jnp.asarray(rng.choice(N, size=(1, depth), replace=False),
+                       jnp.int32)
+    pf, pp = feat_lib.merge_path_features(feats, probs, path,
+                                          jnp.array([depth]))
+    for d in range(depth):
+        node = int(path[0, d])
+        assert bool(jnp.all(pf[:, 0] <= feats[:, node] + 1e-6))
+        assert bool(jnp.all(pp[:, 0] <= probs[:, node] + 1e-6))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 512), scale=st.floats(0.01, 100.0),
+       seed=st.integers(0, 99))
+def test_int8_quantization_error_bound(n, scale, seed):
+    from repro.runtime.collectives import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    # error ≤ half a quantization step, scale = amax/127
+    assert float(jnp.max(jnp.abs(dequantize_int8(q, s) - x))) <= float(s) * 0.51
+
+
+@settings(**SETTINGS)
+@given(alive=st.integers(1, 600), tp=st.sampled_from([4, 8, 16]),
+       pods=st.sampled_from([1, 2, 4]))
+def test_remesh_plan_sound(alive, tp, pods):
+    from repro.runtime.fault import plan_remesh
+    plan = plan_remesh(alive, tp, pods)
+    if plan is None:
+        assert alive < tp  # truly unrecoverable
+    else:
+        assert np.prod(plan) <= alive          # never over-subscribes
+        assert plan[-1] == tp                  # TP degree preserved
+        assert all(p >= 1 for p in plan)

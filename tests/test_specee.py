@@ -1,0 +1,239 @@
+"""SpecEE core tests: T1 features/predictor, verification invariants,
+scheduler (T2), predictor training, oracle exits."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SpecEEConfig
+from repro.configs import get_config
+from repro.core import draft as draft_lib
+from repro.core import engine as eng
+from repro.core import features as feat_lib
+from repro.core import predictor as pred_lib
+from repro.core import scheduler as sched_lib
+from repro.models.common import lm_head_weight
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    run = get_config("llama2-7b").smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    sw = eng.init_specee(m, jax.random.PRNGKey(1))
+    return run, m, params, sw
+
+
+# ---------------- T1: features + predictor ----------------
+def test_feature_dims():
+    spec = SpecEEConfig()
+    assert spec.num_speculative == 4          # paper §4.3.2
+    assert spec.feature_dim() == 12           # 4 tokens × 3 features
+    assert spec.predictor_hidden == 512       # paper Fig. 8 DSE optimum
+    assert spec.predictor_layers == 2
+
+
+def test_predictor_memory_matches_paper():
+    """Paper §7.4.2: all predictors of Llama2-7B ≈ 416 KB ((12·512+512·1)
+    weights, fp16, no biases). Ours stores fp32 + biases → ~918 KB; the
+    claim we verify is the ORDER: predictors ≪ 1 MB ≪ the DLM."""
+    spec = SpecEEConfig()
+    b = pred_lib.predictor_param_bytes(spec, 32)
+    weights_only_fp16 = (12 * 512 + 512 * 1) * 32 * 2
+    assert weights_only_fp16 == 425_984          # the paper's 416 KiB
+    assert b < 1_000_000, f"{b} bytes"
+
+
+def test_features_match_full_head(setup):
+    run, m, params, sw = setup
+    B, k = 3, 4
+    hn = jax.random.normal(jax.random.PRNGKey(2), (B, run.model.d_model))
+    lm_w = lm_head_weight(params)
+    ids = jax.random.randint(jax.random.PRNGKey(3), (B, k), 0,
+                             run.model.vocab_size)
+    prev = jnp.full((B, k), 0.25)
+    feats, probs = feat_lib.extract_features(hn, lm_w, ids, prev)
+    # speculative logits must equal the matching columns of the full head
+    full = hn.astype(jnp.float32) @ lm_w.astype(jnp.float32)
+    expect = jnp.take_along_axis(full, ids, axis=1)
+    np.testing.assert_allclose(feats[:, :k], expect, rtol=2e-5, atol=1e-5)
+    # probs are a softmax over the k logits (local, not global)
+    np.testing.assert_allclose(jnp.sum(probs, -1), 1.0, rtol=1e-5)
+    # variation = probs - prev
+    np.testing.assert_allclose(feats[:, 2 * k:], probs - prev, atol=1e-6)
+
+
+def test_predictor_stacked_indexing():
+    spec = SpecEEConfig()
+    bank = pred_lib.init_predictors(spec, 5, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, spec.feature_dim()))
+    for e in [0, 3, 4]:
+        p = pred_lib.predictor_at(bank, jnp.int32(e))
+        out = pred_lib.apply_predictor(p, x)
+        assert out.shape == (7,)
+        assert ((out >= 0) & (out <= 1)).all()
+
+
+# ---------------- verification + engine invariants ----------------
+def test_no_exit_equivalence(setup):
+    """threshold > 1 ⇒ SpecEE output bit-identical to dense greedy decode."""
+    run, m, params, sw = setup
+    B, T, G = 2, 8, 5
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, T), 0,
+                                run.model.vocab_size)
+    logits, cache, _ = m.prefill(params, {"tokens": tokens}, max_seq=T + G + 1)
+    ref = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    tok = ref[0]
+    for _ in range(G):
+        logits, cache = m.decode_step(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        ref.append(tok)
+    first, st = eng.init_decode_state(m, params, sw, {"tokens": tokens},
+                                      T + G + 1)
+    got = [first]
+    for _ in range(G):
+        tok2, st, info = eng.ar_decode_step(m, params, sw, st, threshold=1.5)
+        assert not bool(info.exited.any())
+        got.append(tok2)
+    for a, b in zip(ref, got):
+        assert bool((a == b).all())
+
+
+def test_oracle_exit_verified(setup):
+    """With an oracle speculative set (contains the layer-truth), forcing the
+    predictor (threshold<0) must exit at the FIRST exit point whose global
+    argmax lies in the set, and emit exactly that argmax."""
+    run, m, params, sw = setup
+    B, T = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, T), 0,
+                                run.model.vocab_size)
+    first, st = eng.init_decode_state(m, params, sw, {"tokens": tokens}, T + 4)
+
+    # compute layer-wise global argmax at the first decode position by hand
+    h = m.embed(params, first[:, None])[:, 0, :]
+    pos = st.cache["len"]
+    argmaxes = []
+    seg_cache = st.cache["segments"][0]
+    for u in range(m.segments[0][1]):
+        h, seg_cache = m.run_unit(params, 0, jnp.int32(u), h, seg_cache, pos)
+        glog = m.logits(params, h)
+        argmaxes.append(jnp.argmax(glog, -1).astype(jnp.int32))
+    # oracle set = argmax after unit 1 (plus junk)
+    k = run.specee.num_speculative
+    oracle = jnp.stack([argmaxes[1]] * k, axis=1)
+    tok, st2, info = eng.ar_decode_step(m, params, sw, st, threshold=-0.1,
+                                        spec_ids_override=oracle)
+    assert bool(info.exited.all())
+    assert [int(x) for x in info.exit_point] == [1, 1]
+    assert bool((tok == argmaxes[1]).all())
+
+
+def test_exit_freezes_recurrent_state():
+    """For SSM archs, rows that exit keep their SSM state stale while live
+    rows advance (live-mask semantics)."""
+    run = get_config("mamba2-130m").smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    B = 2
+    cache = m.empty_cache(B, 8)
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, run.model.d_model))
+    seg = cache["segments"][0]
+    live = jnp.array([True, False])
+    _, seg2 = m.run_unit(params, 0, jnp.int32(0), h, seg,
+                         cache["len"], live_mask=live)
+    s_old = seg["u0"]["state"][0]
+    s_new = seg2["u0"]["state"][0]
+    assert not np.allclose(s_new[0], s_old[0])      # live row advanced
+    np.testing.assert_allclose(s_new[1], s_old[1])  # exited row stale
+
+
+# ---------------- T2: scheduler ----------------
+def test_scheduler_active_mask_union():
+    spec = SpecEEConfig(online_window=3, online_radius=2, offline_top_frac=0.25)
+    E = 16
+    st = sched_lib.init_state(2, spec)
+    offline = jnp.zeros((E,), bool).at[jnp.array([0, 5])].set(True)
+    # empty queue: only offline
+    am = sched_lib.active_mask(st, offline, spec, E)
+    np.testing.assert_array_equal(am[0], offline)
+    # push exit at 10 for row 0, 3 for row 1
+    st = sched_lib.update(st, jnp.array([10, 3]))
+    am = sched_lib.active_mask(st, offline, spec, E)
+    for e in range(E):
+        exp0 = bool(offline[e]) or abs(e - 10) <= 2
+        exp1 = bool(offline[e]) or abs(e - 3) <= 2
+        assert bool(am[0, e]) == exp0
+        assert bool(am[1, e]) == exp1
+
+
+def test_scheduler_circular_queue():
+    spec = SpecEEConfig(online_window=2)
+    st = sched_lib.init_state(1, spec)
+    st = sched_lib.update(st, jnp.array([1]))
+    st = sched_lib.update(st, jnp.array([2]))
+    st = sched_lib.update(st, jnp.array([3]))  # evicts 1
+    q = sorted(int(x) for x in st["queue"][0])
+    assert q == [2, 3]
+
+
+def test_offline_mask_from_counts():
+    spec = SpecEEConfig(offline_top_frac=0.25)
+    counts = jnp.array([5, 100, 2, 50, 1, 1, 1, 1], jnp.float32)
+    mask = sched_lib.offline_mask_from_counts(counts, spec)
+    assert int(mask.sum()) == 2
+    assert bool(mask[1]) and bool(mask[3])
+
+
+def test_schedule_reduces_predictor_evals(setup):
+    """T2 claim: scheduling activates far fewer predictors than all-layers."""
+    run, m, params, sw = setup
+    spec = dataclasses.replace(run.specee, offline_top_frac=0.25)
+    E = 32
+    st = sched_lib.init_state(4, spec)
+    offline = jnp.zeros((E,), bool).at[:8].set(True)
+    st = sched_lib.update(st, jnp.array([10, 10, 11, 9]))
+    n = float(sched_lib.expected_active_count(st, offline, spec, E))
+    assert n < 0.5 * E  # ~13 of 32
+
+
+# ---------------- draft ----------------
+def test_draft_param_overhead(setup):
+    """DLM ≈ one decoder layer (+fusion): a few % of the target model."""
+    run, m, params, sw = setup
+    n_target = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    n_draft = sum(x.size for x in jax.tree_util.tree_leaves(sw.draft))
+    assert n_draft < 0.6 * n_target  # smoke models are tiny; full ≈ 3%
+    full = get_config("llama2-7b")
+    n_full_draft = draft_lib.draft_param_count(full.model)
+    assert n_full_draft < 0.05 * full.model.param_count()
+
+
+def test_draft_topk_shapes(setup):
+    run, m, params, sw = setup
+    B = 2
+    h = jax.random.normal(jax.random.PRNGKey(6), (B, run.model.d_model))
+    ids, logits = draft_lib.propose_topk(m, params, h, 4)
+    assert ids.shape == (B, 4) and logits.shape == (B, 4)
+    # top-k really is top-k of the head
+    full = m.logits(params, h)
+    expect = jax.lax.top_k(full, 4)[1]
+    np.testing.assert_array_equal(ids, expect)
+
+
+# ---------------- predictor training pipeline ----------------
+def test_predictor_training_learns(setup):
+    run, m, params, sw = setup
+    from repro.core import predictor_training as pt
+    batches = [jax.random.randint(jax.random.PRNGKey(i), (4, 24), 0,
+                                  run.model.vocab_size) for i in range(2)]
+    data = pt.collect_dataset(m, params, sw.draft, batches)
+    E = m.num_exit_points
+    assert data.features.shape[0] == E
+    assert data.features.shape[2] == run.specee.feature_dim()
+    pred, metrics = pt.train_predictors(run.specee, data,
+                                        jax.random.PRNGKey(3), steps=120)
+    base = max(metrics["positive_rate"], 1 - metrics["positive_rate"])
+    assert metrics["accuracy"] >= base - 0.02  # at least the trivial rate

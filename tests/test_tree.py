@@ -1,0 +1,137 @@
+"""T3 tests: static tree structure, hyper-token merged mapping, tree decode
+equivalence + oracle acceptance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import engine as eng
+from repro.core import features as feat_lib
+from repro.core.tree import TreeSpec
+from repro.models.model import build_model
+
+
+def test_tree_structure():
+    t = TreeSpec(depth=2, branch=3)
+    assert t.num_nodes == 13
+    assert t.level_sizes == [1, 3, 9]
+    assert t.path_nodes.shape == (9, 3)
+    # parents
+    assert t.parents[0] == -1
+    assert all(t.parents[i] == 0 for i in (1, 2, 3))
+    assert t.parents[4] == 1 and t.parents[12] == 3
+    # every path starts at root and respects parent links
+    for path in t.path_nodes:
+        assert path[0] == 0
+        for a, b in zip(path[:-1], path[1:]):
+            assert t.parents[b] == a
+    # ancestor mask: diagonal true; child sees parent; parent not child
+    am = t.ancestor_mask
+    assert am.diagonal().all()
+    assert am[4, 1] and not am[1, 4]
+    # children table inverse of parents
+    for n in range(t.num_nodes):
+        p = t.parents[n]
+        if p >= 0:
+            assert n in t.children[p]
+
+
+def test_linear_vs_exponential_mapping_complexity():
+    """The hyper-token mapping is one predictor eval per PATH (linear),
+    versus per-node independent mapping (b^depth · depth node evals)."""
+    for depth in (1, 2, 3):
+        t = TreeSpec(depth=depth, branch=3)
+        assert t.path_nodes.shape[0] == 3 ** depth
+        # mapping evals per exit point = P (merged) vs sum over levels (naive)
+        merged = t.path_nodes.shape[0]
+        assert merged == 3 ** depth  # linear in #paths, one per hyper-token
+
+
+def test_merge_path_features_is_cannikin_min():
+    B, N, k = 2, 5, 4
+    feats = jax.random.normal(jax.random.PRNGKey(0), (B, N, 3 * k))
+    probs = jax.random.uniform(jax.random.PRNGKey(1), (B, N, k))
+    paths = jnp.array([[0, 1, 3], [0, 2, -1]], jnp.int32)
+    lens = jnp.array([3, 2])
+    pf, pp = feat_lib.merge_path_features(feats, probs, paths, lens)
+    np.testing.assert_allclose(pf[:, 0], jnp.min(feats[:, [0, 1, 3]], axis=1))
+    np.testing.assert_allclose(pf[:, 1], jnp.min(feats[:, [0, 2]], axis=1))
+    np.testing.assert_allclose(pp[:, 1], jnp.min(probs[:, [0, 2]], axis=1))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    run = get_config("llama2-7b").smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    sw = eng.init_specee(m, jax.random.PRNGKey(1))
+    tree = TreeSpec(depth=2, branch=3)
+    return run, m, params, sw, tree
+
+
+def _dense_ref(m, params, tokens, steps, max_seq):
+    logits, cache, _ = m.prefill(params, {"tokens": tokens}, max_seq=max_seq)
+    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    tok = out[0]
+    for _ in range(steps):
+        logits, cache = m.decode_step(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, 1)
+
+
+def test_tree_no_exit_matches_dense(setup):
+    run, m, params, sw, tree = setup
+    B, T = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                run.model.vocab_size)
+    ref = _dense_ref(m, params, tokens, 10, 48 + tree.num_nodes)
+    first, st = eng.init_tree_decode_state(m, params, sw, {"tokens": tokens},
+                                           48, tree)
+    emitted = [[int(first[b])] for b in range(B)]
+    for _ in range(7):
+        out, n, st, info = eng.tree_decode_step(m, params, sw, st, tree,
+                                                threshold=1.5)
+        for b in range(B):
+            emitted[b].extend(int(x) for x in out[b, :int(n[b])])
+    for b in range(B):
+        got = emitted[b][:ref.shape[1]]
+        assert got == [int(x) for x in ref[b]][:len(got)], f"row {b}"
+
+
+def test_tree_oracle_acceptance(setup):
+    """Tree whose first chain matches the dense continuation accepts depth
+    tokens + bonus each step, all equal to the dense reference (also proves
+    the accepted-KV commit is correct across steps)."""
+    run, m, params, sw, tree = setup
+    B, T = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                                run.model.vocab_size)
+    ref = np.asarray(_dense_ref(m, params, tokens, 12, 64 + tree.num_nodes))
+    first, st = eng.init_tree_decode_state(m, params, sw, {"tokens": tokens},
+                                           64, tree)
+    ptr = [1, 1]
+    for step in range(4):
+        node_toks = np.random.default_rng(step).integers(
+            0, run.model.vocab_size, (B, tree.num_nodes)).astype(np.int32)
+        for b in range(B):
+            node_toks[b, 1] = ref[b, ptr[b]]
+            node_toks[b, 4] = ref[b, ptr[b] + 1]
+        out, n, st, info = eng.tree_decode_step(
+            m, params, sw, st, tree, threshold=1.5,
+            node_tokens_override=jnp.asarray(node_toks))
+        assert [int(x) for x in info.accepted_len] == [2, 2]
+        for b in range(B):
+            got = [int(x) for x in out[b, :int(n[b])]]
+            exp = [int(x) for x in ref[b, ptr[b]:ptr[b] + int(n[b])]]
+            assert got == exp, f"step {step} row {b}: {got} vs {exp}"
+            ptr[b] += int(n[b])
+
+
+def test_tree_requires_attention_stack():
+    run = get_config("mamba2-130m").smoke()
+    m = build_model(run)
+    assert not m.supports_tree()
+    run2 = get_config("llama2-7b").smoke()
+    assert build_model(run2).supports_tree()

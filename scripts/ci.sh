@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Minimal CI: tier-1 suite on CPU with Pallas kernels in interpret mode.
+#
+# Off-TPU every pallas_call auto-selects interpret=True (see
+# repro.kernels.interpret_default), so this exercises the real kernel
+# dataflow — including the fused exit-gate chain — without hardware.
+#
+#   ./scripts/ci.sh            # whole tier-1 suite
+#   ./scripts/ci.sh tests/test_exit_gate.py   # one file
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+# hypothesis-based suites importorskip when dev deps are absent
+python -m pip install -q -r requirements-dev.txt 2>/dev/null || true
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

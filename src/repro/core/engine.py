@@ -11,9 +11,22 @@
     root→leaf path, exit at the rearmost (Cannikin) layer, acceptance by
     greedy path matching at the exit layer.
 
+Per-exit-point decisions flow through the fused exit-gate entry points
+(``repro.kernels.exit_gate.ops``), selected by ``ModelFlags.exit_gate_kernel``:
+the AR gate (spec-head features + predictor) runs as ONE Pallas kernel and
+verification/emit streams the LM head (running argmax, no (B, V) logits).
+The tree gate fuses its three stages piecewise — spec-head feature kernel,
+banked predictor-MLP kernel, streaming node verify — because the hyper-token
+min-merge sits between features and predictor (folding the merge into the
+gate kernel is a ROADMAP follow-on). With the flag off the same entry points
+pin the historical four-op reference sequence bit-for-bit.
+
 Semantics guarantees (property-tested in tests/):
   * with the predictor disabled (threshold > 1) the emitted tokens are
-    bit-identical to dense greedy decoding;
+    bit-identical to dense greedy decoding. Caveat: the fused verify
+    accumulates logits in fp32; with bf16 weights on TPU a near-exact tie in
+    the top-2 logits may therefore resolve differently than the bf16 dense
+    matmul (a numerics improvement, exercised only when the fused flag is on);
   * when a row exits, its emitted token equals argmax of the FULL LM head at
     the exit layer (verification), and is a member of the speculative set.
 """
@@ -31,9 +44,24 @@ from repro.core import draft as draft_lib
 from repro.core import features as feat_lib
 from repro.core import predictor as pred_lib
 from repro.core import scheduler as sched_lib
+from repro.kernels.exit_gate import ops as gate_lib
 from repro.models import common
 from repro.models.common import Params, lm_head_weight
 from repro.models.model import Model
+
+
+def _gate_impls(model: Model) -> Tuple[str, bool]:
+    """Exit-gate backend selection for a model's flags.
+
+    Returns (impl for ``gate_lib.exit_gate``/``verify_argmax``, fused?).
+    With ``exit_gate_kernel`` off the engine still flows through the same
+    entry points, pinned to the "ref" impl — the historical four-op sequence,
+    bit-for-bit (this is the numerics reference the fused path is property-
+    tested against).
+    """
+    fused = getattr(model.flags, "exit_gate_kernel", False)
+    impl = getattr(model.flags, "exit_gate_impl", "auto") if fused else "ref"
+    return impl, fused
 
 
 class SpecEEWeights(NamedTuple):
@@ -113,6 +141,8 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     pos = state.cache["len"]
     B = state.last_token.shape[0]
     k = spec.num_speculative
+    gate_impl, _ = _gate_impls(model)
+    sh_kernel = getattr(model.flags, "spec_head_kernel", False)
 
     # ---- 1. speculate: draft proposes k candidate tokens ----
     emb = model.embed(params, state.last_token[:, None])[:, 0, :]
@@ -154,17 +184,17 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
             def with_predictor(args):
                 h, prev_probs, exited, exit_token, exit_pt = args
                 hn = model.final_norm(params, h)
-                feats, probs = feat_lib.extract_features(
-                    hn, lm_w, spec_ids, prev_probs,
-                    use_kernel=getattr(model.flags, "spec_head_kernel", False))
-                pp = pred_lib.predictor_at(sw.predictors, ep)
-                p_exit = pred_lib.apply_predictor(pp, feats)   # (B,)
+                # single exit-gate entry point: spec-head features +
+                # predictor fused ("kernel"/"xla") or the four-op reference
+                p_exit, probs, _ = gate_lib.exit_gate(
+                    hn, lm_w, spec_ids, prev_probs, sw.predictors, ep,
+                    impl=gate_impl, spec_head_kernel=sh_kernel)
                 would = act & (p_exit > thresh)
 
                 def verify(args2):
                     exited, exit_token, exit_pt = args2
-                    glogits = (hn @ lm_w.astype(hn.dtype)).astype(jnp.float32)
-                    gtok = jnp.argmax(glogits, axis=-1).astype(jnp.int32)
+                    gtok, _ = gate_lib.verify_argmax(hn, lm_w,
+                                                     impl=gate_impl)
                     confirmed = jnp.any(gtok[:, None] == spec_ids, axis=1)
                     newly = would & confirmed
                     exit_token = jnp.where(newly, gtok, exit_token)
@@ -205,9 +235,10 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
         new_segs.append(seg_cache)
         ep_base += reps
 
-    # ---- 5. emit: exited rows use the verified token, others the full head ----
-    final_logits = model.logits(params, h)                     # (B, V) fp32
-    final_tok = jnp.argmax(final_logits, axis=-1).astype(jnp.int32)
+    # ---- 5. emit: exited rows use the verified token, others the full head
+    # (streamed through the verify kernel when fused — one LM-head pass) ----
+    final_tok, _ = gate_lib.verify_argmax(model.final_norm(params, h), lm_w,
+                                          impl=gate_impl)
     token = jnp.where(exited, exit_token, final_tok)
     spec_hit = jnp.any(token[:, None] == spec_ids, axis=1)
 
@@ -300,6 +331,11 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     N = tree.num_nodes
     k = spec.num_speculative
     pos0 = state.cache["len"]
+    gate_impl, fused = _gate_impls(model)
+    sh_kernel = getattr(model.flags, "spec_head_kernel", False)
+    # the tree gate's predictor stage goes through the Pallas wrapper only
+    # when the fused backend actually resolves to the kernel path
+    pred_kernel = fused and gate_lib.resolve_impl(gate_impl) == "kernel"
     # static scratch offset = allocated seq len minus N
     any_k = jax.tree_util.tree_leaves(state.cache["segments"][0])[0]
     scratch_off = any_k.shape[2] - N
@@ -351,15 +387,16 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                 hn = model.final_norm(params, h).reshape(B * N, -1)
                 feats, probs = feat_lib.extract_features(
                     hn, lm_w, child_toks.reshape(B * N, k),
-                    prev_probs.reshape(B * N, k))
+                    prev_probs.reshape(B * N, k), use_kernel=sh_kernel)
                 feats = feats.reshape(B, N, -1)
                 probs = probs.reshape(B, N, k)
                 # hyper-token merge: one predictor eval per root→leaf path
                 pf, _ = feat_lib.merge_path_features(
                     feats, probs, path_nodes,
                     jnp.full((path_nodes.shape[0],), path_nodes.shape[1]))
-                pp = pred_lib.predictor_at(sw.predictors, ep)
-                p_exit = pred_lib.apply_predictor(pp, pf)   # (B, P)
+                p_exit = pred_lib.apply_predictor_banked(
+                    sw.predictors, ep, pf,
+                    use_kernel=pred_kernel)                    # (B, P)
                 fire = jnp.max(p_exit, axis=1) > thresh     # best path fires
                 newly = act & fire
                 exit_pt = jnp.where(newly, ep, exit_pt)
@@ -391,8 +428,11 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
         ep_base += reps
 
     # ---- acceptance walk on global logits at the (per-row) exit layer ----
-    glogits = model.logits(params, h)                       # (B, N, V) fp32
-    gtok = jnp.argmax(glogits, axis=-1).astype(jnp.int32)   # (B, N)
+    # B·N node rows stream through the verify kernel when fused: one LM-head
+    # pass, never a (B, N, V) logits tensor
+    hn_nodes = model.final_norm(params, h).reshape(B * N, -1)
+    gtok = gate_lib.verify_argmax(hn_nodes, lm_w,
+                                  impl=gate_impl)[0].reshape(B, N)
 
     rows = jnp.arange(B)
     cur = jnp.zeros((B,), jnp.int32)                        # root

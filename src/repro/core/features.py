@@ -8,6 +8,12 @@ Three features per speculative token, k=4 tokens -> 12-dim input:
 The (D×k) gather-GEMM is the hot spot the paper's custom operator targets; the
 Pallas TPU version lives in ``repro.kernels.spec_head`` and is selected with
 ``use_kernel=True`` (identical numerics, fused gather+GEMM+softmax+Δ).
+
+The AR decode engine no longer stops at the features: with
+``ModelFlags.exit_gate_kernel`` the whole feature→predictor→verify chain runs
+through ``repro.kernels.exit_gate`` in one fused pipeline. This module stays
+the feature-level building block for the tree path (whose hyper-token merge
+sits between features and predictor) and for predictor training.
 """
 from __future__ import annotations
 

@@ -60,6 +60,24 @@ def predictor_at(stacked: Params, idx: jnp.ndarray) -> Params:
         lambda x: jax.lax.dynamic_index_in_dim(x, idx, 0, False), stacked)
 
 
+def apply_predictor_banked(stacked: Params, idx: jnp.ndarray,
+                           features: jnp.ndarray,
+                           use_kernel: bool = False) -> jnp.ndarray:
+    """Single entry point for a stacked-bank predictor evaluation.
+
+    ``use_kernel=True`` routes the bank ``dynamic_index`` + the fused 2-layer
+    Pallas MLP through one jit (``repro.kernels.predictor_mlp.ops``); falls
+    back to the reference path for non-2-layer banks (DSE sweeps).
+    features: (..., feature_dim) -> exit probability (...,).
+    """
+    if use_kernel and len(stacked["layers"]) == 2:
+        from repro.kernels.predictor_mlp.ops import predictor_mlp_at
+        lead = features.shape[:-1]
+        flat = features.reshape(-1, features.shape[-1])
+        return predictor_mlp_at(flat, stacked, idx).reshape(lead)
+    return apply_predictor(predictor_at(stacked, idx), features)
+
+
 def predictor_param_bytes(spec: SpecEEConfig, num_exit_points: int) -> int:
     dims = ([spec.feature_dim()] +
             [spec.predictor_hidden] * (spec.predictor_layers - 1) + [1])

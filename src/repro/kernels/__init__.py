@@ -12,6 +12,9 @@ Kernels:
                      cutlass/MegaBlocks group-GEMM with one dense row-batched
                      kernel (tree nodes = rows).
   predictor_mlp    — fused 2-layer MLP predictor (T1), one HBM round-trip.
+  exit_gate        — the fused exit-gate pipeline: spec-head features +
+                     predictor MLP in one kernel, plus the streaming LM-head
+                     argmax-verify kernel (never materializes (B, V) logits).
   flash_attention  — blocked causal/windowed flash attention (prefill path).
   decode_attention — split-KV (flash-decoding) attention for 32k/500k decode.
 """
@@ -25,3 +28,11 @@ def on_tpu() -> bool:
 def interpret_default() -> bool:
     """Pallas interpret mode: True off-TPU (CPU CI), False on real hardware."""
     return not on_tpu()
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable ``pltpu.CompilerParams`` (named ``TPUCompilerParams``
+    on jax<=0.4.x). Every kernel's ``compiler_params=`` goes through here."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

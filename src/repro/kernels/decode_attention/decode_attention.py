@@ -94,7 +94,7 @@ def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
     kt = jnp.moveaxis(k_cache, 2, 1)                         # (B,KVH,S,hd)
     vt = jnp.moveaxis(v_cache, 2, 1)
 
-    from repro.kernels import interpret_default
+    from repro.kernels import interpret_default, tpu_compiler_params
     kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
                                window=window, nk=nk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -120,7 +120,7 @@ def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KVH, n_rep, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret_default(),
         name="specee_decode_attention",

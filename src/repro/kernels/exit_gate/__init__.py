@@ -1,0 +1,43 @@
+"""Fused exit-gate pipeline — the decode hot loop's per-exit-point cost.
+
+SpecEE's speedup claim (paper §6.2, §7.3) holds only while the exit decision
+costs a small fraction of one transformer unit. The reference decode loop
+runs the gate as four separate XLA ops:
+
+  1. spec-head gather-GEMM      — k LM-head columns · hidden  -> (B, k) logits
+  2. softmax + Δ-feature concat — (B, 3k) predictor features
+  3. predictor MLP + sigmoid    — (B,) exit probability
+  4. verification               — FULL LM head (B, V) fp32 logits, argmax,
+                                  membership test against the speculative set
+
+This package fuses that pipeline into at most TWO Pallas calls per exit
+point:
+
+  ``exit_gate``     — one kernel chaining (1)+(2)+(3): scalar-prefetched
+                      column gather, per-row k-GEMM accumulation, softmax,
+                      Δ-features and the 2-layer MLP, with the (B, 3k)
+                      features never leaving VMEM.
+  ``argmax_verify`` — streaming LM-head argmax for (4): tiles over the vocab
+                      dimension keeping only a running (max, argmax) per row,
+                      so the full (B, V) fp32 logits are NEVER materialized.
+
+HBM-traffic accounting per exit point (weights dtype bytes ``w``, fp32
+activations), B rows, hidden D, vocab V, k speculative tokens:
+
+  reference gate:   k·D·w   (column gather)
+  reference verify: D·V·w   (LM-head read)  +  B·V·4 write + B·V·4 read
+                    (materialized logits)   +  B·V·4 read (argmax pass)
+  fused gate:       k·D·w   (same gather — already minimal)
+  fused verify:     D·V·w   (ONE LM-head pass; running max/argmax live in
+                    VMEM/SMEM scratch, no logits round-trip)
+
+For Llama2-7B decode (D=4096, V=32000, bf16 weights, B=8) the eliminated
+logits round-trips are 3·B·V·4 ≈ 3.1 MB per exit point — on top of removing
+three kernel-launch/dispatch boundaries. The reference four-op path is kept
+bit-for-bit intact behind the same entry points (``impl="ref"``) and is the
+oracle for the parity tests in ``tests/test_exit_gate.py``.
+
+Files: ``exit_gate.py`` (Pallas kernels), ``ops.py`` (jit'd public wrappers +
+impl selection + stacked-predictor-bank routing), ``ref.py`` (pure-jnp
+oracles).
+"""

@@ -1,0 +1,232 @@
+"""Pallas TPU kernels for the fused exit gate (see package docstring).
+
+``exit_gate_fused`` — grid (B, k, nd), reduction tile innermost. Cell
+(b, j, d) streams block d of LM-head column ``spec_ids[b, j]`` (scalar-
+prefetched index_map, exactly the spec_head gather) and accumulates the
+partial dot into a per-row (1, k) VMEM scratch. The LAST cell of each row
+finishes the whole gate on-chip: softmax over the k logits, Δ-features
+against ``prev_probs``, the 2-layer predictor GEMM→ReLU→GEMV→sigmoid —
+features and intermediates never touch HBM.
+
+``argmax_verify_fused`` — grid (B, nv, nd): vocab tiles with a D-reduction
+inner loop. A (1, block_v) VMEM scratch accumulates the tile's logits; when
+a tile's reduction completes, its (max, argmax) folds into SMEM running
+scalars. Ties resolve to the lowest index (strict-greater update + first-max
+within a tile), matching ``jnp.argmax``. HBM traffic = one pass over the LM
+head; the (B, V) logits are never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fit_block(dim: int, block: int) -> int:
+    block = min(block, dim)
+    while dim % block:
+        block //= 2
+    return block
+
+
+# ---------------------------------------------------------------------------
+# gate: spec-head gather-GEMM + softmax + Δ-features + predictor MLP
+# ---------------------------------------------------------------------------
+def _gate_kernel(ids_ref, h_ref, w_ref, pp_ref, w1_ref, b1_ref, w2_ref,
+                 b2_ref, p_ref, probs_ref, logits_ref, acc_ref, *,
+                 k: int, nd: int):
+    j = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when((j == 0) & (d == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = h_ref[...].astype(jnp.float32)            # (1, Dt)
+    w = w_ref[...].astype(jnp.float32)            # (Dt, 1)
+    part = jnp.dot(h, w, preferred_element_type=jnp.float32)   # (1, 1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
+    acc_ref[...] += jnp.where(lane == j, part[0, 0], 0.0)
+
+    @pl.when((j == k - 1) & (d == nd - 1))
+    def _finish():
+        logits = acc_ref[...]                                  # (1, k)
+        m = jnp.max(logits, axis=1, keepdims=True)
+        e = jnp.exp(logits - m)
+        probs = e / jnp.sum(e, axis=1, keepdims=True)
+        delta = probs - pp_ref[...].astype(jnp.float32)
+        feats = jnp.concatenate([logits, probs, delta], axis=1)  # (1, 3k)
+        w1 = w1_ref[...].astype(jnp.float32)                   # (3k, H)
+        hid = jnp.maximum(
+            jnp.dot(feats, w1, preferred_element_type=jnp.float32)
+            + b1_ref[...].astype(jnp.float32), 0.0)            # (1, H)
+        out = (jnp.dot(hid, w2_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+               + b2_ref[...].astype(jnp.float32))              # (1, 1)
+        p_ref[...] = jax.nn.sigmoid(out)
+        probs_ref[...] = probs
+        logits_ref[...] = logits
+
+
+def exit_gate_fused(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                    spec_ids: jnp.ndarray, prev_probs: jnp.ndarray,
+                    w1: jnp.ndarray, b1: jnp.ndarray, w2: jnp.ndarray,
+                    b2: jnp.ndarray, block_d: int = 512
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """hn: (B, D); lm_head: (D, V); spec_ids: (B, k) int32; prev_probs:
+    (B, k); predictor weights w1 (3k, H), b1 (H,), w2 (H, 1), b2 (1,).
+
+    Returns (p_exit (B,), probs (B, k), logits (B, k)), all fp32.
+    """
+    B, D = hn.shape
+    k = spec_ids.shape[1]
+    H = w1.shape[1]
+    assert w1.shape[0] == 3 * k, (w1.shape, k)
+    block_d = _fit_block(D, block_d)
+    nd = D // block_d
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, k, nd),
+        in_specs=[
+            # h row b, reduction tile d
+            pl.BlockSpec((1, block_d), lambda b, j, d, ids: (b, d)),
+            # LM-head column spec_ids[b, j], reduction tile d
+            pl.BlockSpec((block_d, 1), lambda b, j, d, ids: (d, ids[b, j])),
+            # previous-layer local probs, row b
+            pl.BlockSpec((1, k), lambda b, j, d, ids: (b, 0)),
+            # predictor weights — whole matrices, trivially VMEM-resident
+            pl.BlockSpec((3 * k, H), lambda b, j, d, ids: (0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, d, ids: (0, 0)),
+            pl.BlockSpec((H, 1), lambda b, j, d, ids: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, d, ids: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, j, d, ids: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, j, d, ids: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, j, d, ids: (b, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32)],
+    )
+    from repro.kernels import interpret_default, tpu_compiler_params
+    fn = pl.pallas_call(
+        functools.partial(_gate_kernel, k=k, nd=nd),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret_default(),
+        name="specee_exit_gate",
+    )
+    p_exit, probs, logits = fn(spec_ids, hn, lm_head,
+                               prev_probs.astype(jnp.float32),
+                               w1, b1.reshape(1, H), w2, b2.reshape(1, 1))
+    return p_exit[:, 0], probs, logits
+
+
+# ---------------------------------------------------------------------------
+# verify: streaming LM-head argmax (never materializes (B, V) logits)
+# ---------------------------------------------------------------------------
+def _verify_kernel(h_ref, w_ref, tok_ref, max_ref, acc_ref, best_ref,
+                   barg_ref, *, V: int, block_v: int, nv: int, nd: int):
+    v = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((v == 0) & (d == 0))
+    def _init_row():
+        best_ref[0, 0] = NEG_INF
+        barg_ref[0, 0] = 0
+
+    h = h_ref[...].astype(jnp.float32)            # (1, Dt)
+    w = w_ref[...].astype(jnp.float32)            # (Dt, Vt)
+    acc_ref[...] += jnp.dot(h, w, preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _fold_tile():
+        col = v * block_v + jax.lax.broadcasted_iota(jnp.int32,
+                                                     acc_ref.shape, 1)
+        vals = jnp.where(col < V, acc_ref[...], NEG_INF)       # (1, Vt)
+        tmax = jnp.max(vals)
+        targ = v * block_v + jnp.argmax(vals[0, :]).astype(jnp.int32)
+        better = tmax > best_ref[0, 0]
+        barg_ref[0, 0] = jnp.where(better, targ, barg_ref[0, 0])
+        best_ref[0, 0] = jnp.where(better, tmax, best_ref[0, 0])
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            tok_ref[...] = jnp.full((1, 1), barg_ref[0, 0], jnp.int32)
+            max_ref[...] = jnp.full((1, 1), best_ref[0, 0], jnp.float32)
+
+
+def argmax_verify_fused(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                        block_v: int = 512, block_d: int = 512
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """hn: (B, D); lm_head: (D, V).
+
+    Returns (argmax token (B,) int32, max logit (B,) fp32) with fp32
+    accumulation, reading the LM head exactly once.
+    """
+    B, D = hn.shape
+    V = lm_head.shape[1]
+    block_d = _fit_block(D, block_d)
+    nd = D // block_d
+    # prefer a block that divides V — padding the LM head would copy the
+    # whole (D, V) matrix through HBM, which is exactly the traffic this
+    # kernel exists to avoid. Only pathological vocabs (e.g. minicpm's
+    # odd 122753, where fitting degrades to tiny blocks) take the pad
+    # path; padded columns are masked to -inf inside the kernel.
+    fitted = _fit_block(V, min(block_v, V))
+    if fitted >= min(128, V):
+        block_v, pad_v = fitted, 0
+    else:
+        block_v = min(block_v, V)
+        pad_v = (-V) % block_v
+        lm_head = jnp.pad(lm_head, ((0, 0), (0, pad_v)))
+    nv = (V + pad_v) // block_v
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(B, nv, nd),
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda b, v, d: (b, d)),
+            pl.BlockSpec((block_d, block_v), lambda b, v, d: (d, v)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, v, d: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, v, d: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_v), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.int32),
+        ],
+    )
+    from repro.kernels import interpret_default, tpu_compiler_params
+    fn = pl.pallas_call(
+        functools.partial(_verify_kernel, V=V, block_v=block_v, nv=nv, nd=nd),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret_default(),
+        name="specee_argmax_verify",
+    )
+    tok, mx = fn(hn, lm_head)
+    return tok[:, 0], mx[:, 0]

@@ -1,0 +1,151 @@
+"""Public jit'd wrappers for the fused exit gate.
+
+``exit_gate()`` / ``verify_argmax()`` are the decode engine's SINGLE entry
+points for the per-exit-point decision; an ``impl`` switch selects the
+backend:
+
+  "kernel" — the Pallas chain (interpret mode off-TPU): gate = one fused
+             kernel, verify = the streaming argmax kernel.
+  "xla"    — the same fused dataflow as one XLA computation: gate is the
+             jnp chain under a single jit; verify streams vocab tiles with a
+             ``lax.scan`` running (max, argmax) — still never materializes
+             the (B, V) logits.
+  "ref"    — the engine's historical unfused op sequence, bit-for-bit
+             (verification matmuls in ``hn.dtype``). The numerics reference.
+  None / "auto" — "kernel" on TPU; off-TPU the gate takes "xla" and the
+             verify takes "ref" (on CPU one BLAS GEMM beats any streaming
+             formulation — the logits-round-trip saving is an HBM property).
+
+The stacked predictor bank is routed THROUGH the wrapper: ``exit_gate``
+takes the full ``(E, ...)`` bank plus the exit-point index and performs the
+``dynamic_index_in_dim`` inside the same jit as the kernel launch, so the
+per-step weight slice fuses with the gate instead of bouncing through HBM.
+Predictor banks that are not 2-layer (DSE sweeps) fall back from "kernel"
+to the jnp chain automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.exit_gate import ref as gate_ref
+from repro.kernels.exit_gate.exit_gate import (argmax_verify_fused,
+                                               exit_gate_fused)
+
+IMPLS = (None, "auto", "kernel", "xla", "ref")
+
+
+def resolve_impl(impl: Optional[str], cpu_default: str = "xla") -> str:
+    """Backend an ``impl`` request resolves to on the current platform."""
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl in (None, "auto"):
+        return "kernel" if on_tpu() else cpu_default
+    return impl
+
+
+_resolve = resolve_impl
+
+
+def _index_bank(predictors, ep):
+    """Slice one predictor out of the stacked (E, ...) bank."""
+    from repro.core.predictor import predictor_at
+    return predictor_at(predictors, ep)
+
+
+@partial(jax.jit, static_argnames=("impl", "spec_head_kernel", "block_d"))
+def exit_gate(hn: jnp.ndarray, lm_head: jnp.ndarray, spec_ids: jnp.ndarray,
+              prev_probs: jnp.ndarray, predictors, ep: jnp.ndarray,
+              impl: Optional[str] = None, spec_head_kernel: bool = False,
+              block_d: int = 512
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused exit decision for one exit point.
+
+    hn: (B, D) final-normed hidden; lm_head: (D, V); spec_ids: (B, k) int32;
+    prev_probs: (B, k); predictors: stacked bank (every leaf (E, ...));
+    ep: scalar int32 exit-point index.
+
+    Returns (p_exit (B,), local_probs (B, k), logits (B, k)), all fp32.
+    """
+    impl = _resolve(impl)
+    pp = _index_bank(predictors, ep)
+    layers = pp["layers"]
+    if impl == "kernel" and len(layers) == 2:
+        return exit_gate_fused(hn, lm_head, spec_ids, prev_probs,
+                               layers[0]["w"], layers[0]["b"],
+                               layers[1]["w"], layers[1]["b"],
+                               block_d=block_d)
+    if impl == "ref" and spec_head_kernel:
+        # historical path with the spec_head Pallas kernel selected
+        from repro.kernels.spec_head import ops as sh_ops
+        logits, probs = sh_ops.spec_head(hn, lm_head, spec_ids)
+        feats = jnp.concatenate(
+            [logits, probs, probs - prev_probs.astype(jnp.float32)], axis=-1)
+        return gate_ref.mlp_ref(feats, pp), probs, logits
+    # "xla" and "ref" share the jnp dataflow — under this jit XLA fuses it
+    # into one computation either way; "ref" exists so callers can pin the
+    # historical numerics explicitly.
+    return gate_ref.exit_gate_ref(hn, lm_head, spec_ids, prev_probs, pp)
+
+
+def _verify_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                          block_v: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """lax.scan over vocab tiles with a running (max, argmax) carry."""
+    from repro.kernels.exit_gate.exit_gate import _fit_block
+    B, D = hn.shape
+    V = lm_head.shape[1]
+    # same no-copy preference as the kernel: only pad for vocabs where no
+    # reasonable block divides V
+    fitted = _fit_block(V, min(block_v, V))
+    if fitted >= min(128, V):
+        block_v, pad_v = fitted, 0
+    else:
+        block_v = min(block_v, V)
+        pad_v = (-V) % block_v
+    wp = jnp.pad(lm_head, ((0, 0), (0, pad_v))) if pad_v else lm_head
+    nv = (V + pad_v) // block_v
+    hf = hn.astype(jnp.float32)
+    lanes = jnp.arange(block_v)
+
+    def body(carry, v):
+        best, barg = carry
+        w = jax.lax.dynamic_slice_in_dim(wp, v * block_v, block_v, axis=1)
+        tile = hf @ w.astype(jnp.float32)                      # (B, Vt)
+        col = v * block_v + lanes
+        tile = jnp.where(col[None, :] < V, tile, -jnp.inf)
+        tmax = jnp.max(tile, axis=-1)
+        targ = (v * block_v + jnp.argmax(tile, axis=-1)).astype(jnp.int32)
+        better = tmax > best
+        return (jnp.where(better, tmax, best),
+                jnp.where(better, targ, barg)), None
+
+    init = (jnp.full((B,), -jnp.inf, jnp.float32),
+            jnp.zeros((B,), jnp.int32))
+    (best, barg), _ = jax.lax.scan(body, init, jnp.arange(nv))
+    return barg, best
+
+
+@partial(jax.jit, static_argnames=("impl", "block_v", "block_d"))
+def verify_argmax(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                  impl: Optional[str] = None, block_v: int = 512,
+                  block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-LM-head argmax for verification. hn: (B, D); lm_head: (D, V).
+
+    "kernel"/"xla" stream the vocab dimension with fp32 accumulation and
+    never materialize (B, V); "ref" is the engine's historical materialized
+    matmul in ``hn.dtype``. Auto resolves to "kernel" on TPU (where the
+    saved logits round-trips are HBM traffic) and to "ref" on CPU, where
+    one BLAS GEMM beats any streaming formulation and the memory win is
+    moot. Returns (token (B,) int32, max logit (B,) fp32).
+    """
+    impl = _resolve(impl, cpu_default="ref")
+    if impl == "kernel":
+        return argmax_verify_fused(hn, lm_head, block_v=block_v,
+                                   block_d=block_d)
+    if impl == "xla":
+        return _verify_streaming_xla(hn, lm_head, block_v)
+    return gate_ref.verify_argmax_ref(hn, lm_head, compute_dtype=hn.dtype)

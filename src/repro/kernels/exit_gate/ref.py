@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the fused exit gate (allclose tests + ref impl).
+
+``exit_gate_ref`` reproduces the decode engine's historical four-stage gate
+by DELEGATING to the canonical implementations (``spec_head_ref`` for the
+gather-GEMM + softmax, ``repro.core.predictor.apply_predictor`` for the MLP)
+— the oracle cannot drift from the ops the engine's reference path is made
+of. ``verify_argmax_ref`` reproduces the historical verification (full-head
+matmul in ``compute_dtype`` then fp32 argmax).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predictor import apply_predictor
+from repro.kernels.spec_head.ref import spec_head_ref
+
+
+def mlp_ref(feats: jnp.ndarray, predictor) -> jnp.ndarray:
+    """predictor: {"layers": [{w,b}, ...]} (repro.core.predictor layout,
+    single bank entry) -> (B,) exit probability."""
+    return apply_predictor(predictor, feats)
+
+
+def exit_gate_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                  spec_ids: jnp.ndarray, prev_probs: jnp.ndarray,
+                  predictor) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The unfused gate: returns (p_exit (B,), probs (B, k), logits (B, k))."""
+    logits, probs = spec_head_ref(hn, lm_head, spec_ids)
+    feats = jnp.concatenate([logits, probs,
+                             probs - prev_probs.astype(jnp.float32)], axis=-1)
+    return apply_predictor(predictor, feats), probs, logits
+
+
+def verify_argmax_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
+                      compute_dtype: Optional[jnp.dtype] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-head argmax via materialized (B, V) logits.
+
+    compute_dtype=None accumulates in fp32 (the kernel's contract);
+    compute_dtype=hn.dtype is the engine's historical behaviour.
+    Returns (token (B,) int32, max logit (B,) fp32).
+    """
+    dt = jnp.float32 if compute_dtype is None else compute_dtype
+    logits = (hn.astype(dt) @ lm_head.astype(dt)).astype(jnp.float32)
+    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+            jnp.max(logits, axis=-1))

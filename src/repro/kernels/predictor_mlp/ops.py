@@ -15,3 +15,16 @@ def predictor_mlp(x: jnp.ndarray, params) -> jnp.ndarray:
     layout, 2-layer case) -> (B,) exit probabilities."""
     l1, l2 = params["layers"]
     return predictor_mlp_fused(x, l1["w"], l1["b"], l2["w"], l2["b"])
+
+
+@jax.jit
+def predictor_mlp_at(x: jnp.ndarray, stacked, ep: jnp.ndarray) -> jnp.ndarray:
+    """Stacked-bank entry: dynamic-index predictor ``ep`` out of the
+    (E, ...)-stacked bank and run the fused MLP, all inside one jit so the
+    weight slice feeds the kernel without an HBM round-trip.
+
+    x: (B, F); stacked: bank with leading (E,) on every leaf."""
+    p = jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, ep, 0, False), stacked)
+    l1, l2 = p["layers"]
+    return predictor_mlp_fused(x, l1["w"], l1["b"], l2["w"], l2["b"])

@@ -59,12 +59,12 @@ def spec_head_logits(hn: jnp.ndarray, lm_head: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, 1), lambda b, j, d, ids: (b, j)),
     )
-    from repro.kernels import interpret_default
+    from repro.kernels import interpret_default, tpu_compiler_params
     fn = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, k), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret_default(),
         name="specee_spec_head",

@@ -10,6 +10,8 @@ import math
 
 import jax
 
+from repro.sharding.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -20,16 +22,10 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, found {len(devices)} — run "
             f"under XLA_FLAGS=--xla_force_host_platform_device_count={n}")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices[:n])
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     devices = jax.devices()[: data * model]
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-        devices=devices)
+    return make_mesh((data, model), ("data", "model"), devices=devices)

@@ -75,6 +75,13 @@ class ModelFlags:
     flash_attention: bool = False  # Pallas prefill kernel
     decode_kernel: bool = False    # Pallas split-KV decode kernel
     spec_head_kernel: bool = False  # Pallas fused speculative-LM-head kernel
+    exit_gate_kernel: bool = False  # fused exit-gate pipeline (§Perf): the
+    #   per-exit-point spec-head→predictor→verify chain runs through
+    #   repro.kernels.exit_gate instead of the four-op reference sequence;
+    #   verification streams the LM head (never materializes (B, V) logits)
+    exit_gate_impl: str = "auto"   # fused backend: "auto" (kernel on TPU,
+    #   fused-XLA elsewhere) | "kernel" | "xla" — only read when
+    #   exit_gate_kernel is True
     remat: str = "none"            # "none" | "full"
     chunk_threshold: int = 2048    # chunked exact attention above this seq len
     chunk_size: int = 512          # query-chunk size for chunked attention

@@ -1,2 +1,3 @@
+from repro.sharding.compat import axis_types_kwargs, make_mesh, shard_map
 from repro.sharding.policies import (batch_specs, cache_specs, named,
                                      param_specs, specee_specs, state_specs)

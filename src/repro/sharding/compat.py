@@ -1,0 +1,43 @@
+"""Version-portability shims for the jax.sharding surface.
+
+Newer jax exposes ``jax.sharding.AxisType`` (explicit-sharding mesh axis
+semantics), a ``jax.make_mesh(..., axis_types=...)`` kwarg, and a top-level
+``jax.shard_map``. jax<=0.4.x has none of the three — every mesh / shard_map
+construction in repro (and the subprocess test scripts) goes through these
+helpers so the same code runs on both.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (AxisType.Auto,) * n}`` when supported, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              devices: Optional[Sequence[Any]] = None):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    kwargs = axis_types_kwargs(len(axis_names))
+    if devices is not None:
+        kwargs["devices"] = devices
+    try:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+    except TypeError:
+        # AxisType exists but make_mesh predates the kwarg (or vice versa)
+        kwargs.pop("axis_types", None)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (0.4.x)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

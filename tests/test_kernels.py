@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis is a soft dev "
+                    "dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.spec_head.ops import spec_head
 from repro.kernels.spec_head.ref import spec_head_ref

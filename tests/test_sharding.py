@@ -15,8 +15,8 @@ from repro.models.model import build_model
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch,policy", [
@@ -73,8 +73,9 @@ from repro.launch.specs import input_specs
 from repro.launch.dryrun import step_fn_for
 from repro.config import ShapeCell
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.sharding.compat import make_mesh
+
+mesh = make_mesh((2, 2), ("data", "model"))
 run = get_config("llama2-7b").smoke()
 for cell, kind in [(ShapeCell("train_4k", "train", 32, 4), "train"),
                    (ShapeCell("decode_32k", "decode", 64, 4), "decode")]:

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, get_bundle, token_batches, decode_run
-from repro.core import engine as eng
+from repro.api import TreeStrategy
 from repro.core.tree import TreeSpec
 
 
@@ -29,17 +29,16 @@ def run(timer: Timer) -> None:
               f"avg_units={t12['avg_units']:.2f}")
 
     # + T3: tree speculative decoding (tokens per TLM forward > 1)
-    tree = TreeSpec(depth=2, branch=3)
+    strat = TreeStrategy(tree=TreeSpec(depth=2, branch=3))
     m, params, sw = b.model, b.params, b.sw
-    first, st = eng.init_tree_decode_state(m, params, sw,
-                                           {"tokens": prompts}, 64, tree)
-    step = jax.jit(lambda p, s, stt: eng.tree_decode_step(m, p, s, stt, tree))
+    first, st = strat.init_state(m, params, sw, {"tokens": prompts}, 64)
+    step = jax.jit(lambda p, s, stt: strat.step(m, p, s, stt))
     step(params, sw, st)  # compile
     emitted, ticks = 1, 0
     t0 = time.perf_counter()
     while emitted < new + 1 and ticks < 4 * new:
-        out, n, st, info = step(params, sw, st)
-        emitted += int(jnp.sum(n))
+        res, st = step(params, sw, st)
+        emitted += int(jnp.sum(res.counts))
         ticks += 1
     dt = time.perf_counter() - t0
     timer.add("ablation/T1+T2+T3", dt / max(emitted - 1, 1) * 1e6,

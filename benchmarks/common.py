@@ -84,34 +84,37 @@ def get_bundle(arch: str = "llama2-7b", train_steps: int = 30,
 def decode_run(bundle: Bundle, mode: str, prompts: jnp.ndarray,
                new_tokens: int = 24, threshold: Optional[float] = None
                ) -> Dict[str, Any]:
-    """Greedy-decode ``new_tokens`` for each prompt row.
+    """Greedy-decode ``new_tokens`` for each prompt row through the unified
+    decode API (strategy step = the exact computation the serving engine
+    jits per tick).
 
     mode: "dense" | "specee" | "specee_t1" (no scheduling).
     Returns tokens, wall time, avg units executed, exit histogram."""
     import dataclasses
+
+    from repro.api import DenseStrategy, SpecEEStrategy
     run, m, params, sw = bundle.run, bundle.model, bundle.params, bundle.sw
     if mode == "specee_t1":
         run = dataclasses.replace(
             run, specee=dataclasses.replace(run.specee,
                                             schedule_enabled=False))
         m = build_model(run, m.flags)
+    strat = (DenseStrategy() if mode == "dense"
+             else SpecEEStrategy(threshold=threshold))
     B, T = prompts.shape
     max_seq = T + new_tokens + 2
-    first, st = eng.init_decode_state(m, params, sw, {"tokens": prompts},
-                                      max_seq)
-    step = jax.jit(lambda p, s, stt: (
-        eng.dense_decode_step(m, p, s, stt) if mode == "dense"
-        else eng.ar_decode_step(m, p, s, stt, threshold=threshold)))
+    first, st = strat.init_state(m, params, sw, {"tokens": prompts}, max_seq)
+    step = jax.jit(lambda p, s, stt: strat.step(m, p, s, stt))
     # warmup (compile)
     step(params, sw, st)
     toks, units, exits = [first], [], []
     t0 = time.perf_counter()
     for _ in range(new_tokens):
-        tok, st, info = step(params, sw, st)
-        toks.append(tok)
-        units.append(info.units_run)
-        exits.append(info.exit_point)
-    jax.block_until_ready(tok)
+        res, st = step(params, sw, st)
+        toks.append(res.tokens[:, 0])
+        units.append(res.units_run)
+        exits.append(res.exit_layer)
+    jax.block_until_ready(toks[-1])
     dt = time.perf_counter() - t0
     units = np.asarray(jax.device_get(units))
     exits = np.asarray(jax.device_get(exits))

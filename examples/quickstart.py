@@ -1,15 +1,27 @@
-"""Quickstart: build a model, run SpecEE decoding, inspect exits.
+"""Quickstart: build a model, decode through the unified API, inspect exits.
 
     PYTHONPATH=src python examples/quickstart.py [--arch llama2-7b]
+                                                 [--strategy specee|dense|tree]
 
 Uses the smoke-scale config so it runs on a laptop CPU in seconds; every
-line is the same public API a full-scale deployment uses.
+line is the same public API a full-scale deployment uses:
+
+    engine  = Engine.create(model, params, sw, strategy="specee")
+    session = engine.new_session()
+    result  = session.prefill(prompts, max_new_tokens=N)   # StepResult
+    result  = session.step()                               # StepResult
+
+``StepResult`` is canonical across strategies — dense full-depth, AR SpecEE
+(1 token/tick), and tree speculative decoding (up to depth+1 tokens/tick)
+all emit (tokens, counts, done, exit_layer, accept_len, ...), so this loop
+is strategy-agnostic.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import Engine
 from repro.configs import get_config
 from repro.core import engine as eng
 from repro.models.model import build_model
@@ -19,6 +31,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--strategy", default="specee",
+                    choices=["specee", "dense", "tree"])
     args = ap.parse_args()
 
     # 1. config + model (smoke-scale: same family, laptop-sized)
@@ -31,19 +45,21 @@ def main():
     # 2. SpecEE weights: draft (DLM) + per-exit-point predictors + schedule
     sw = eng.init_specee(model, jax.random.PRNGKey(1))
 
-    # 3. prefill a prompt, then decode with speculative early exiting
+    # 3. one engine surface for every decode strategy
+    engine = Engine.create(model, params, sw, strategy=args.strategy)
+    session = engine.new_session()
+
     prompt = jnp.arange(12)[None, :] % run.model.vocab_size
-    first, state = eng.init_decode_state(model, params, sw,
-                                         {"tokens": prompt},
-                                         max_seq=64)
-    tokens = [int(first[0])]
-    for _ in range(args.new_tokens):
-        tok, state, info = eng.ar_decode_step(model, params, sw, state)
-        tokens.append(int(tok[0]))
-        print(f"  token={int(tok[0]):6d} exit_point="
-              f"{int(info.exit_point[0])}/{model.num_exit_points} "
-              f"exited={bool(info.exited[0])} "
-              f"units_run={int(info.units_run)}")
+    res = session.prefill(prompt, max_new_tokens=args.new_tokens + 1)
+    tokens = res.row_tokens(0)
+    while not session.all_done():
+        res = session.step()
+        tokens.extend(res.row_tokens(0))
+        print(f"  emitted={res.row_tokens(0)} "
+              f"exit_layer={int(res.exit_layer[0])}/{model.num_exit_points} "
+              f"exited={bool(res.exited[0])} "
+              f"accept_len={int(res.accept_len[0])} "
+              f"units_run={int(res.units_run)}")
     print("generated:", tokens)
 
 

@@ -1,10 +1,14 @@
-"""Serving driver (deliverable b): continuous-batching engine with SpecEE.
+"""Serving driver (deliverable b): continuous-batching engine over the
+unified decode API, with SpecEE as the fast path.
 
 Trains the full SpecEE stack (draft + predictors + offline schedule) on a
-smoke model, then serves a stream of batched requests and reports per-request
-exit statistics and the dense-vs-SpecEE throughput delta.
+smoke model, then serves a stream of batched requests through each decode
+strategy — dense, AR SpecEE, and tree speculative decoding (tree-mode
+serving emits up to depth+1 tokens per engine tick) — and reports
+per-request exit/acceptance statistics.
 
     PYTHONPATH=src python examples/serve_specee.py --requests 6
+    PYTHONPATH=src python examples/serve_specee.py --ci   # tiny CI smoke
 """
 import argparse
 import os
@@ -15,7 +19,6 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import get_bundle
 from repro.serving import ServingEngine
 
 
@@ -23,10 +26,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--ci", action="store_true",
+                    help="tiny smoke config: minimal training, 2 requests — "
+                         "exercises the full API surface in seconds")
     args = ap.parse_args()
+    if args.ci:
+        args.requests, args.max_new = 2, 5
 
     print("training SpecEE bundle (target + draft + predictors)...")
-    b = get_bundle()
+    from benchmarks.common import get_bundle
+    if args.ci:
+        b = get_bundle(train_steps=2, draft_steps=8, pred_steps=20, layers=4)
+    else:
+        b = get_bundle()
     print(f"  draft top-k hit rate: {b.draft_metrics['topk_hit_rate']:.2f}")
     print(f"  predictor accuracy:   {b.predictor_metrics['accuracy']:.2f}")
 
@@ -38,9 +50,10 @@ def main():
     prompts = [pool[i % pool.shape[0], :int(rng.integers(6, 20))]
                for i in range(args.requests)]
 
+    modes = ("specee", "dense") if args.ci else ("specee", "dense", "tree")
     results = {}
-    for mode in ("specee", "dense"):
-        se = ServingEngine(b.model, b.params, b.sw, specee=mode == "specee")
+    for mode in modes:
+        se = ServingEngine(b.model, b.params, b.sw, strategy=mode)
         reqs = [se.submit(p, max_new_tokens=args.max_new) for p in prompts]
         t0 = time.perf_counter()
         se.run_to_completion()
@@ -52,10 +65,16 @@ def main():
         for r in reqs[:3]:
             exits = [e for e in r.exit_points
                      if e < b.model.num_exit_points]
-            print(f"  req {r.uid}: {len(r.output)} tokens, "
-                  f"{len(exits)}/{len(r.exit_points)} early exits, "
-                  f"avg exit layer "
-                  f"{np.mean(exits) if exits else float('nan'):.1f}")
+            line = (f"  req {r.uid}: {len(r.output)} tokens, "
+                    f"{len(exits)}/{len(r.exit_points)} early exits, "
+                    f"avg exit layer "
+                    f"{np.mean(exits) if exits else float('nan'):.1f}")
+            if mode == "tree":
+                line += (f", {sum(r.accept_lens)} draft tokens accepted "
+                         f"over {len(r.accept_lens)} ticks")
+            print(line)
+        ok = all(len(r.output) == args.max_new for r in reqs)
+        assert ok, f"[{mode}] some requests did not complete their budget"
     sp = results["dense"][0] / results["specee"][0]
     print(f"\nSpecEE-vs-dense wall clock through the serving engine: {sp:.2f}x"
           f"\n(NOTE: this demo measures the CONTINUOUS-BATCHING wrapper on "

@@ -1,4 +1,5 @@
-"""T3 showcase: tree speculative decoding with hyper-token early exiting.
+"""T3 showcase: tree speculative decoding with hyper-token early exiting,
+through the unified decode API (``TreeStrategy`` behind ``DecodeSession``).
 
     PYTHONPATH=src python examples/speculative_decode.py
 """
@@ -11,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import get_bundle
-from repro.core import engine as eng
+from repro.api import Engine, TreeStrategy
 from repro.core.tree import TreeSpec
 
 
@@ -23,17 +24,18 @@ def main():
           f"{tree.path_nodes.shape[0]} hyper-token paths "
           f"(mapping complexity is LINEAR in paths — paper §6)")
 
+    engine = Engine.create(m, params, sw, strategy=TreeStrategy(tree=tree))
+    session = engine.new_session()
     prompt = jnp.arange(10)[None, :] % b.run.model.vocab_size
-    first, st = eng.init_tree_decode_state(m, params, sw,
-                                           {"tokens": prompt}, 96, tree)
-    emitted = [int(first[0])]
+    res = session.prefill(prompt, max_seq=96)
+    emitted = res.row_tokens(0)
     for step in range(10):
-        out, n, st, info = eng.tree_decode_step(m, params, sw, st, tree)
-        new = [int(x) for x in out[0, :int(n[0])]]
+        res = session.step()
+        new = res.row_tokens(0)
         emitted.extend(new)
-        print(f"step {step}: accepted {int(info.accepted_len[0])} draft "
+        print(f"step {step}: accepted {int(res.accept_len[0])} draft "
               f"tokens + bonus -> {new} "
-              f"(exit {int(info.exit_point[0])}/{m.num_exit_points})")
+              f"(exit {int(res.exit_layer[0])}/{m.num_exit_points})")
     print("generated:", emitted)
 
 

@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
-# Minimal CI: tier-1 suite on CPU with Pallas kernels in interpret mode.
+# Minimal CI: tier-1 suite on CPU with Pallas kernels in interpret mode,
+# plus example smoke runs so API breakage in examples fails CI.
 #
 # Off-TPU every pallas_call auto-selects interpret=True (see
 # repro.kernels.interpret_default), so this exercises the real kernel
 # dataflow — including the fused exit-gate chain — without hardware.
 #
-#   ./scripts/ci.sh            # whole tier-1 suite
-#   ./scripts/ci.sh tests/test_exit_gate.py   # one file
+#   ./scripts/ci.sh            # whole tier-1 suite + example smoke
+#   ./scripts/ci.sh tests/test_exit_gate.py   # one file (skips examples)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,3 +16,15 @@ export JAX_PLATFORMS=cpu
 python -m pip install -q -r requirements-dev.txt 2>/dev/null || true
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# example smoke (tiny configs, interpret mode): quickstart drives
+# Engine/DecodeSession directly, serve_specee trains a minimal bundle and
+# serves through the continuous-batching engine. Only on full-suite runs.
+if [ "$#" -eq 0 ]; then
+  echo "[ci] examples/quickstart.py (smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python examples/quickstart.py --new-tokens 3
+  echo "[ci] examples/serve_specee.py --ci (smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python examples/serve_specee.py --ci
+fi

@@ -1,0 +1,29 @@
+"""Unified decode API: one engine surface for dense / AR-SpecEE / tree.
+
+The paper's merged-mapping insight — "different decoding methods share the
+same essential characteristics" — lifted into the public API:
+
+    from repro.api import Engine
+
+    engine = Engine.create(model, params, sw, strategy="specee")
+    session = engine.new_session()
+    res = session.prefill(prompts, max_new_tokens=64)     # StepResult
+    while not session.all_done():
+        res = session.step()                              # StepResult
+
+Strategies are pluggable (``DenseStrategy``, ``SpecEEStrategy``,
+``TreeStrategy`` or any ``DecodeStrategy`` subclass); the step functions in
+``repro.core.engine`` remain the jittable kernels-of-record underneath. The
+serving engine (``repro.serving``) is a thin continuous-batching loop over
+``DecodeSession``; see docs/api.md for the migration table from the old
+direct step-function calls.
+"""
+from repro.api.session import DecodeSession, Engine
+from repro.api.strategies import (DecodeStrategy, DenseStrategy,
+                                  SpecEEStrategy, TreeStrategy, get_strategy)
+from repro.api.types import StepResult
+
+__all__ = [
+    "Engine", "DecodeSession", "StepResult", "DecodeStrategy",
+    "DenseStrategy", "SpecEEStrategy", "TreeStrategy", "get_strategy",
+]

@@ -1,0 +1,234 @@
+"""Engine / DecodeSession — the one inference surface over every decode mode.
+
+    engine = Engine.create(model, params, sw, strategy="tree")
+    session = engine.new_session()
+    first = session.prefill({"tokens": prompts}, max_new_tokens=64)
+    while not session.all_done():
+        res = session.step()            # canonical StepResult, any strategy
+
+``Engine`` binds (model, params, SpecEE weights, strategy) and jits the
+strategy step exactly once; sessions share the compiled step. A session owns
+one batched ``DecodeState`` plus the host-side bookkeeping jit can't express:
+per-row token budgets, EOS cut-off, and the ``done`` mask of the canonical
+``StepResult``.
+
+Two session styles:
+  * whole-batch: ``prefill(prompts)`` then ``step()`` — examples, benchmarks;
+  * slot-based (continuous batching): ``new_session(batch=B, max_seq=S)``
+    pre-allocates empty rows; ``prefill_row(slot, prompt)`` admits a request
+    into one row (batch-1 prefill + insert) while other rows keep decoding —
+    the serving engine is a thin loop over exactly this.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.models.model import Model
+
+from repro.api.strategies import DecodeStrategy, get_strategy
+from repro.api.types import StepResult
+
+_NO_BUDGET = np.iinfo(np.int64).max
+
+
+def _insert_row(big, small, row: int, batch: int):
+    """Insert batch-1 pytree ``small`` as row ``row`` of batched ``big``."""
+    def one(b, s):
+        axis = None
+        for i, (db, ds) in enumerate(zip(b.shape, s.shape)):
+            if db == batch and ds == 1:
+                axis = i
+                break
+        if axis is None and b.shape == s.shape:
+            return b  # batch-independent leaf (e.g. PRNG key): keep
+        assert axis is not None, f"no batch axis: {b.shape} vs {s.shape}"
+        idx = [slice(None)] * b.ndim
+        idx[axis] = row
+        src = jnp.squeeze(s, axis=axis)
+        return b.at[tuple(idx)].set(src.astype(b.dtype))
+    return jax.tree_util.tree_map(one, big, small)
+
+
+class Engine:
+    """Binds a model + weights to a decode strategy; factory for sessions."""
+
+    def __init__(self, model: Model, params, sw=None,
+                 strategy: Union[str, DecodeStrategy, None] = None):
+        self.model = model
+        self.params = params
+        self.sw = sw
+        self.strategy = get_strategy(strategy)
+        self.strategy.validate(model, sw)
+        strat = self.strategy
+        self._step_jit = jax.jit(
+            lambda p, s, st: strat.step(model, p, s, st))
+
+    @classmethod
+    def create(cls, model: Model, params, sw=None,
+               strategy: Union[str, DecodeStrategy, None] = None) -> "Engine":
+        """The canonical constructor: ``Engine.create(model, params, sw,
+        strategy="dense"|"specee"|"tree"|DecodeStrategy(...))``."""
+        return cls(model, params, sw=sw, strategy=strategy)
+
+    @property
+    def emit_width(self) -> int:
+        return self.strategy.emit_width(self.model)
+
+    def new_session(self, batch: Optional[int] = None,
+                    max_seq: Optional[int] = None,
+                    prng_seed: int = 0) -> "DecodeSession":
+        """``batch=None``: empty shell, populated by ``prefill(prompts)``.
+        ``batch=B``: pre-allocated empty rows for slot-based serving
+        (``max_seq`` defaults to the run's ``serve.max_seq_len``)."""
+        return DecodeSession(self, batch=batch, max_seq=max_seq,
+                             prng_seed=prng_seed)
+
+
+class DecodeSession:
+    def __init__(self, engine: Engine, batch: Optional[int] = None,
+                 max_seq: Optional[int] = None, prng_seed: int = 0):
+        self.engine = engine
+        self._prng_seed = prng_seed
+        self._max_seq = max_seq
+        self._state: Optional[eng.DecodeState] = None
+        self.batch: Optional[int] = None
+        if batch is not None:
+            if max_seq is None:
+                max_seq = engine.model.run.serve.max_seq_len
+                self._max_seq = max_seq
+            self._state = engine.strategy.empty_state(
+                engine.model, engine.sw, batch, max_seq,
+                prng=jax.random.PRNGKey(prng_seed))
+            self._alloc_bookkeeping(batch, live=False)
+
+    # ----- host-side bookkeeping -----
+    def _alloc_bookkeeping(self, batch: int, live: bool) -> None:
+        self.batch = batch
+        self._emitted = np.zeros(batch, np.int64)
+        self._budget = np.full(batch, _NO_BUDGET, np.int64)
+        self._eos: List[Optional[int]] = [None] * batch
+        # empty slots count as done until a request is admitted
+        self._done = np.full(batch, not live, bool)
+
+    def _set_row_limits(self, row: int, max_new_tokens: Optional[int],
+                        eos_token: Optional[int]) -> None:
+        self._emitted[row] = 0
+        self._budget[row] = (_NO_BUDGET if max_new_tokens is None
+                             else max_new_tokens)
+        self._eos[row] = eos_token
+        self._done[row] = False
+
+    def _account_row(self, row: int, toks: np.ndarray, count: int) -> int:
+        """Apply budget + EOS to one row's raw emit; returns the kept count
+        and updates ``done``/``emitted``."""
+        if self._done[row]:
+            return 0
+        count = int(min(count, self._budget[row] - self._emitted[row]))
+        eos = self._eos[row]
+        if eos is not None:
+            hits = np.nonzero(toks[:count] == eos)[0]
+            if hits.size:
+                count = int(hits[0]) + 1
+                self._done[row] = True
+        self._emitted[row] += count
+        if self._emitted[row] >= self._budget[row]:
+            self._done[row] = True
+        return count
+
+    def _wrap(self, raw: StepResult) -> StepResult:
+        """Device → host + per-row budget/EOS accounting → canonical result."""
+        tokens = np.asarray(raw.tokens)
+        counts = np.asarray(raw.counts).copy()
+        for row in range(tokens.shape[0]):
+            counts[row] = self._account_row(row, tokens[row], counts[row])
+        return StepResult(tokens=tokens, counts=counts,
+                          done=self._done.copy(),
+                          exit_layer=np.asarray(raw.exit_layer),
+                          accept_len=np.asarray(raw.accept_len),
+                          exited=np.asarray(raw.exited),
+                          units_run=np.asarray(raw.units_run))
+
+    def all_done(self) -> bool:
+        return self._state is None or bool(self._done.all())
+
+    def row_done(self, row: int) -> bool:
+        return bool(self._done[row])
+
+    def live_rows(self) -> np.ndarray:
+        return ~self._done
+
+    # ----- whole-batch entry -----
+    def prefill(self, prompts, max_new_tokens: Optional[int] = None,
+                eos_token: Optional[int] = None,
+                max_seq: Optional[int] = None) -> StepResult:
+        """Prefill the whole batch. ``prompts``: (B, T) int tokens or a
+        ``{"tokens": ...}`` batch dict. Returns the first-token StepResult
+        (the prefill's greedy argmax counts against the budget)."""
+        e = self.engine
+        batch = (dict(prompts) if isinstance(prompts, dict)
+                 else {"tokens": jnp.asarray(prompts, jnp.int32)})
+        B, T = batch["tokens"].shape
+        if max_seq is None:
+            max_seq = self._max_seq
+        if max_seq is None:
+            new = (max_new_tokens if max_new_tokens is not None
+                   else e.model.run.serve.max_new_tokens)
+            max_seq = T + new + e.emit_width + 1
+        self._max_seq = max_seq
+        first, self._state = e.strategy.init_state(
+            e.model, e.params, e.sw, batch, max_seq,
+            prng=jax.random.PRNGKey(self._prng_seed))
+        self._alloc_bookkeeping(B, live=True)
+        # the KV cache has max_seq slots: the budget is always bounded by the
+        # remaining capacity so a budgetless session still terminates instead
+        # of silently clobbering the last cache position
+        cap = max(max_seq - T - 1, 1)
+        budget = cap if max_new_tokens is None else min(max_new_tokens, cap)
+        for row in range(B):
+            self._set_row_limits(row, budget, eos_token)
+        W, E = e.emit_width, e.model.num_exit_points
+        raw = StepResult(
+            tokens=jnp.pad(first[:, None], ((0, 0), (0, W - 1))),
+            counts=jnp.ones((B,), jnp.int32),
+            done=jnp.zeros((B,), bool),
+            exit_layer=jnp.full((B,), E, jnp.int32),
+            accept_len=jnp.zeros((B,), jnp.int32),
+            exited=jnp.zeros((B,), bool),
+            units_run=jnp.int32(0))
+        return self._wrap(raw)
+
+    # ----- slot-based entry (continuous batching) -----
+    def prefill_row(self, row: int, prompt,
+                    max_new_tokens: Optional[int] = None,
+                    eos_token: Optional[int] = None) -> int:
+        """Admit one request into slot ``row``: batch-1 prefill, insert the
+        resulting rows into the batched state. Returns the first token."""
+        assert self._state is not None and self.batch is not None, \
+            "prefill_row needs a pre-allocated session (new_session(batch=B))"
+        e = self.engine
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        first, st1 = e.strategy.init_state(e.model, e.params, e.sw,
+                                           {"tokens": tokens}, self._max_seq)
+        self._state = eng.DecodeState(*[
+            _insert_row(big, small, row, self.batch)
+            for big, small in zip(self._state, st1)])
+        cap = max(self._max_seq - tokens.shape[1] - 1, 1)
+        budget = cap if max_new_tokens is None else min(max_new_tokens, cap)
+        self._set_row_limits(row, budget, eos_token)
+        tok = int(first[0])
+        n = self._account_row(row, np.asarray([tok]), 1)
+        assert n <= 1
+        return tok
+
+    # ----- decode tick -----
+    def step(self) -> StepResult:
+        """One batched decode tick through the strategy's jitted step."""
+        assert self._state is not None, "prefill first"
+        e = self.engine
+        raw, self._state = e._step_jit(e.params, e.sw, self._state)
+        return self._wrap(raw)

@@ -1,0 +1,184 @@
+"""Pluggable decode strategies — adapters from the jittable step functions
+(`repro.core.engine`, the kernels-of-record) to the canonical ``StepResult``.
+
+A strategy owns everything mode-specific: how the state is initialized (the
+tree mode reserves scratch cache slots), how wide a step's emit can be, and
+which engine step runs per tick. Exit-gate backend selection
+(``ModelFlags.exit_gate_kernel``) resolves INSIDE the engine entry points via
+``exit_gate.ops.impl_for_flags`` — callers of this API never touch it.
+
+``strategy.step`` is pure and jit-compatible: ``DecodeSession`` jits it once;
+``launch/dryrun.py`` lowers it against the production mesh as-is.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core.tree import TreeSpec
+from repro.models.model import Model
+
+from repro.api.types import StepResult
+
+
+def _no_done(B: int):
+    return jnp.zeros((B,), bool)
+
+
+def _single_token_result(token, info: eng.StepInfo) -> StepResult:
+    """Pack a 1-token-per-tick engine emit (dense / AR) as a StepResult."""
+    B = token.shape[0]
+    return StepResult(tokens=token[:, None],
+                      counts=jnp.ones((B,), jnp.int32),
+                      done=_no_done(B),
+                      exit_layer=info.exit_point,
+                      accept_len=jnp.zeros((B,), jnp.int32),
+                      exited=info.exited,
+                      units_run=info.units_run)
+
+
+@dataclass(frozen=True)
+class DecodeStrategy:
+    """Base: one decode mode behind the Engine/DecodeSession surface."""
+    name = "base"
+    requires_sw = True
+
+    def emit_width(self, model: Model) -> int:
+        return 1
+
+    def cache_seq_len(self, model: Model, max_seq: int) -> int:
+        """State slots to allocate for a ``max_seq`` session (tree mode
+        reserves its node-scratch region on top)."""
+        return max_seq
+
+    def validate(self, model: Model, sw) -> None:
+        if self.requires_sw and sw is None:
+            raise ValueError(f"{type(self).__name__} needs SpecEE weights "
+                             "(draft + predictors); pass sw=")
+
+    def init_state(self, model: Model, params, sw,
+                   batch: Dict[str, jnp.ndarray], max_seq: int, prng=None
+                   ) -> Tuple[jnp.ndarray, eng.DecodeState]:
+        """Prefill → (first greedy token (B,), state). ``max_seq`` is the
+        SESSION length; strategies add their own scratch internally."""
+        return eng.init_decode_state(model, params, sw, batch,
+                                     self.cache_seq_len(model, max_seq),
+                                     prng=prng)
+
+    def empty_state(self, model: Model, sw, batch: int, max_seq: int,
+                    prng=None) -> eng.DecodeState:
+        return eng.empty_decode_state(model, sw, batch,
+                                      self.cache_seq_len(model, max_seq),
+                                      prng=prng)
+
+    def step(self, model: Model, params, sw, state: eng.DecodeState
+             ) -> Tuple[StepResult, eng.DecodeState]:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class DenseStrategy(DecodeStrategy):
+    """Full-depth baseline. Greedy by default; ``temperature > 0`` samples
+    from the full logits, consuming the session's PRNG stream (seeded via
+    ``Engine.new_session(prng_seed=...)`` / ``ServingEngine(prng_seed=...)``).
+    """
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    name = "dense"
+    requires_sw = False
+
+    def step(self, model, params, sw, state):
+        token, new_state, info = eng.dense_decode_step(
+            model, params, sw, state, temperature=self.temperature,
+            top_k=self.top_k)
+        return _single_token_result(token, info), new_state
+
+
+@dataclass(frozen=True)
+class SpecEEStrategy(DecodeStrategy):
+    """Autoregressive speculative early exiting (paper T1+T2).
+
+    ``threshold=None`` takes ``run.specee.exit_threshold``; a threshold > 1
+    disables exits (bit-identical to dense greedy — the property the
+    session-level parity tests pin).
+    """
+    threshold: Optional[float] = None
+    name = "specee"
+
+    def step(self, model, params, sw, state):
+        token, new_state, info = eng.ar_decode_step(
+            model, params, sw, state, threshold=self.threshold)
+        return _single_token_result(token, info), new_state
+
+
+@dataclass(frozen=True)
+class TreeStrategy(DecodeStrategy):
+    """T3: tree speculative decoding with the hyper-token merged mapping.
+
+    Emits up to ``tree.depth + 1`` tokens per tick (accepted chain + bonus).
+    ``tree=None`` builds the TreeSpec from ``run.specee.tree_depth/_branch``.
+    """
+    tree: Optional[TreeSpec] = None
+    threshold: Optional[float] = None
+    name = "tree"
+
+    def tree_for(self, model: Model) -> TreeSpec:
+        if self.tree is not None:
+            return self.tree
+        spec = model.run.specee
+        return TreeSpec(depth=spec.tree_depth, branch=spec.tree_branch)
+
+    def emit_width(self, model):
+        return self.tree_for(model).depth + 1
+
+    def cache_seq_len(self, model, max_seq):
+        return max_seq + self.tree_for(model).num_nodes
+
+    def validate(self, model, sw):
+        super().validate(model, sw)
+        if not model.supports_tree():
+            raise ValueError(
+                "tree strategy requires a pure-attention stack (DESIGN.md "
+                f"§4); {model.cfg.name} is {model.cfg.family}")
+
+    def step(self, model, params, sw, state):
+        out, n_emit, new_state, info = eng.tree_decode_step(
+            model, params, sw, state, self.tree_for(model),
+            threshold=self.threshold)
+        B = out.shape[0]
+        res = StepResult(tokens=out,
+                         counts=n_emit.astype(jnp.int32),
+                         done=_no_done(B),
+                         exit_layer=info.exit_point,
+                         accept_len=info.accepted_len,
+                         exited=info.exited,
+                         units_run=info.units_run)
+        return res, new_state
+
+
+_BY_NAME = {
+    "dense": DenseStrategy,
+    "specee": SpecEEStrategy,
+    "ar": SpecEEStrategy,
+    "tree": TreeStrategy,
+}
+
+
+def get_strategy(spec: Union[str, DecodeStrategy, None]) -> DecodeStrategy:
+    """Resolve a strategy name or pass an instance through.
+
+    Names: "dense" | "specee" (alias "ar") | "tree".
+    """
+    if spec is None:
+        return SpecEEStrategy()
+    if isinstance(spec, DecodeStrategy):
+        return spec
+    try:
+        return _BY_NAME[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {spec!r}; expected one of {sorted(_BY_NAME)} "
+            "or a DecodeStrategy instance") from None

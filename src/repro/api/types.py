@@ -1,0 +1,45 @@
+"""Canonical result type of the unified decode API.
+
+Every decode strategy — dense full-depth, AR SpecEE, tree speculative —
+emits the SAME shape of result per step. This is the API-level expression of
+the paper's merged-mapping insight ("different decoding methods share the
+same essential characteristics"): a 1-token AR emit is just a tree emit with
+``counts == 1``, so the serving engine, the launchers, and every example can
+drive all three modes through one loop.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+
+class StepResult(NamedTuple):
+    """One decode tick for every row of the session batch.
+
+    The token buffer is FIXED-WIDTH (``W = strategy.emit_width``, e.g. 1 for
+    dense/AR, tree depth + 1 for tree mode) with a per-row valid count —
+    static shapes under jit, ragged semantics on top.
+    """
+    tokens: Any        # (B, W) int32 — left-aligned emitted tokens
+    counts: Any        # (B,)   int32 — valid tokens this tick (0 for a done
+    #                     row once the session truncates it)
+    done: Any          # (B,)   bool  — row finished (eos / budget); always
+    #                     False from a raw strategy step, filled in by the
+    #                     session's host-side bookkeeping
+    exit_layer: Any    # (B,)   int32 — exit point taken (E if full depth)
+    accept_len: Any    # (B,)   int32 — accepted draft tokens (tree mode;
+    #                     0 for dense/AR)
+    exited: Any        # (B,)   bool  — predictor-driven early exit happened
+    units_run: Any     # ()     int32 — units the layer loop executed
+
+    @property
+    def batch(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.tokens.shape[1]
+
+    def row_tokens(self, row: int):
+        """Host-side convenience: the valid tokens of one row as a list."""
+        n = int(self.counts[row])
+        return [int(t) for t in self.tokens[row, :n]]

@@ -183,10 +183,17 @@ def propose_topk(model, params: Params, h_draft: jnp.ndarray,
                  k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Draft hidden -> top-k speculative token ids via the TLM's LM head.
 
-    Returns (spec_ids (B, k) int32, spec_logits (B, k) fp32)."""
-    logits = model.logits(params, h_draft)                     # (B, V) fp32
-    vals, ids = jax.lax.top_k(logits, k)
-    return ids.astype(jnp.int32), vals
+    Streams the vocab through ``exit_gate.ops.verify_topk`` (the top-k
+    sibling of the argmax-verify kernel), so the fused-gate path never
+    materializes the (B, V) draft logits either; with the flag off the
+    "ref" impl reproduces the historical ``model.logits`` + ``top_k``
+    bit-for-bit. Returns (spec_ids (B, k) int32, spec_logits (B, k) fp32).
+    """
+    from repro.kernels.exit_gate import ops as gate_lib
+    hn = model.final_norm(params, h_draft)
+    ids, vals = gate_lib.verify_topk(hn, common.lm_head_weight(params), k,
+                                     impl=gate_lib.impl_for_flags(model.flags))
+    return ids, vals
 
 
 def draft_param_count(cfg: ModelConfig) -> int:

@@ -1,4 +1,10 @@
-"""SpecEE decode engines (paper Fig. 3 dataflow).
+"""SpecEE decode engines (paper Fig. 3 dataflow) — the jittable
+kernels-of-record beneath the unified decode API.
+
+Application code decodes through ``repro.api`` (Engine / DecodeSession /
+StepResult with pluggable strategies — see docs/api.md); the step functions
+here are the pure computations those strategies adapt, and the only
+sanctioned direct callers are ``repro/api`` and the tests.
 
 ``ar_decode_step``  — autoregressive decoding with speculative early exiting:
     draft k speculative tokens → layer-by-layer ``lax.while_loop`` with the
@@ -57,11 +63,11 @@ def _gate_impls(model: Model) -> Tuple[str, bool]:
     With ``exit_gate_kernel`` off the engine still flows through the same
     entry points, pinned to the "ref" impl — the historical four-op sequence,
     bit-for-bit (this is the numerics reference the fused path is property-
-    tested against).
+    tested against). Resolution lives in ``gate_lib.impl_for_flags`` so the
+    decode strategies (repro.api) share the exact same selection.
     """
     fused = getattr(model.flags, "exit_gate_kernel", False)
-    impl = getattr(model.flags, "exit_gate_impl", "auto") if fused else "ref"
-    return impl, fused
+    return gate_lib.impl_for_flags(model.flags), fused
 
 
 class SpecEEWeights(NamedTuple):
@@ -97,18 +103,24 @@ def init_specee(model: Model, key) -> SpecEEWeights:
     )
 
 
-def init_decode_state(model: Model, params: Params, sw: SpecEEWeights,
+def init_decode_state(model: Model, params: Params,
+                      sw: Optional[SpecEEWeights],
                       batch: Dict[str, jnp.ndarray], max_seq: int,
                       prng=None) -> Tuple[jnp.ndarray, DecodeState]:
     """Prefill the target + draft and build the decode state.
 
-    Returns (first greedy token (B,), state)."""
+    ``sw=None`` builds a dense-only state (no draft cache) — only
+    ``dense_decode_step`` may consume it. Returns (first greedy token (B,),
+    state)."""
     spec = model.run.specee
     logits, cache, extras = model.prefill(params, batch, max_seq=max_seq)
     h_all = extras["h_final"]                              # (B, S, D)
-    embeds = model.embed(params, batch["tokens"])
-    dcache = draft_lib.draft_prefill(model.cfg, sw.draft, embeds, h_all,
-                                     max_seq)
+    if sw is not None:
+        embeds = model.embed(params, batch["tokens"])
+        dcache = draft_lib.draft_prefill(model.cfg, sw.draft, embeds, h_all,
+                                         max_seq)
+    else:
+        dcache = {}
     first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     state = DecodeState(
         cache=cache,
@@ -119,6 +131,23 @@ def init_decode_state(model: Model, params: Params, sw: SpecEEWeights,
         prng=prng if prng is not None else jax.random.PRNGKey(0),
     )
     return first, state
+
+
+def empty_decode_state(model: Model, sw: Optional[SpecEEWeights], batch: int,
+                       max_seq: int, prng=None) -> DecodeState:
+    """All-zeros batched state with ``batch`` empty slots — the serving
+    engine's starting point: rows are later populated by inserting batch-1
+    ``init_decode_state`` results (continuous batching)."""
+    dtype = common.dtype_of(model.cfg.dtype)
+    return DecodeState(
+        cache=model.empty_cache(batch, max_seq),
+        draft_cache=(draft_lib.draft_cache(model.cfg, batch, max_seq, dtype)
+                     if sw is not None else {}),
+        sched=sched_lib.init_state(batch, model.run.specee),
+        last_token=jnp.zeros((batch,), jnp.int32),
+        h_last=jnp.zeros((batch, model.cfg.d_model), dtype),
+        prng=prng if prng is not None else jax.random.PRNGKey(0),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -497,19 +526,39 @@ def init_tree_decode_state(model: Model, params: Params, sw: SpecEEWeights,
 
 
 # ---------------------------------------------------------------------------
-# dense baseline step sharing the same state plumbing (for A/B benchmarks)
+# dense baseline step sharing the same state plumbing (for A/B benchmarks
+# and the serving engine's non-SpecEE mode)
 # ---------------------------------------------------------------------------
-def dense_decode_step(model: Model, params: Params, sw: SpecEEWeights,
-                      state: DecodeState) -> Tuple[jnp.ndarray, DecodeState,
-                                                   StepInfo]:
-    pos = state.cache["len"]
-    logits, cache = model.decode_step(params, state.last_token, state.cache)
-    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def dense_decode_step(model: Model, params: Params,
+                      sw: Optional[SpecEEWeights], state: DecodeState,
+                      temperature: float = 0.0, top_k: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, DecodeState, StepInfo]:
+    """One dense (full-depth) decode step.
+
+    Greedy (``temperature<=0``) emits through ``gate_lib.verify_argmax`` —
+    the LM head streams with the exit-gate impl the model's flags select, so
+    the fused path stops materializing (B, V) logits here too ("ref" keeps
+    the historical materialized argmax bit-for-bit). ``temperature>0``
+    samples from the full logits (sampling needs the distribution), splitting
+    ``state.prng`` each step so seeds thread through the serving engine.
+    """
+    h, cache = model.decode_step_hidden(params, state.last_token, state.cache)
+    if temperature > 0.0:
+        from repro.serving.sampler import sample
+        prng, sub = jax.random.split(state.prng)
+        logits = model.logits(params, h)
+        token = sample(logits, sub, temperature=temperature, top_k=top_k)
+    else:
+        prng = state.prng
+        gate_impl, _ = _gate_impls(model)
+        token, _ = gate_lib.verify_argmax(model.final_norm(params, h),
+                                          lm_head_weight(params),
+                                          impl=gate_impl)
     B = token.shape[0]
     E = model.num_exit_points
     new_state = DecodeState(cache=cache, draft_cache=state.draft_cache,
                             sched=state.sched, last_token=token,
-                            h_last=state.h_last, prng=state.prng)
+                            h_last=h, prng=prng)
     info = StepInfo(exit_point=jnp.full((B,), E, jnp.int32),
                     exited=jnp.zeros((B,), bool),
                     units_run=jnp.int32(E),

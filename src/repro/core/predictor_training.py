@@ -167,20 +167,22 @@ def offline_exit_counts(model: Model, params: Params, sw, token_batches,
                         max_new: int = 16) -> np.ndarray:
     """Run AR SpecEE decoding with ALL predictors active and histogram where
     exits occur (paper Fig. 10)."""
-    from repro.core import engine as eng
     import dataclasses
+
+    from repro.api import SpecEEStrategy
     E = model.num_exit_points
     counts = np.zeros(E + 1, np.int64)
     spec_all = dataclasses.replace(model.run.specee, schedule_enabled=False)
     model_all = type(model)(dataclasses.replace(model.run, specee=spec_all),
                             model.flags)
+    strat = SpecEEStrategy()
     for tokens in token_batches:
         B, T = tokens.shape
-        first, st = eng.init_decode_state(model_all, params, sw,
-                                          {"tokens": tokens}, T + max_new + 1)
+        first, st = strat.init_state(model_all, params, sw,
+                                     {"tokens": tokens}, T + max_new + 1)
         for _ in range(max_new):
-            tok, st, info = eng.ar_decode_step(model_all, params, sw, st)
-            pts = np.asarray(jnp.minimum(info.exit_point, E))
+            res, st = strat.step(model_all, params, sw, st)
+            pts = np.asarray(jnp.minimum(res.exit_layer, E))
             for p in pts:
                 counts[p] += 1
     return counts

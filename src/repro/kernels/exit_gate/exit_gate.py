@@ -14,6 +14,14 @@ a tile's reduction completes, its (max, argmax) folds into SMEM running
 scalars. Ties resolve to the lowest index (strict-greater update + first-max
 within a tile), matching ``jnp.argmax``. HBM traffic = one pass over the LM
 head; the (B, V) logits are never materialized.
+
+``topk_verify_fused`` — the top-k sibling of the argmax kernel (draft
+proposal path): same grid and tile accumulation, but each completed tile
+folds into a running sorted (1, k) VMEM top-k list via k static
+mask-extract-max passes over [running ∥ tile]. Because the running list is
+kept in descending (value, then ascending id) order and tiles arrive in
+vocab order, ties resolve to the lowest vocab index — matching
+``jax.lax.top_k`` on the materialized logits exactly.
 """
 from __future__ import annotations
 
@@ -172,6 +180,15 @@ def _verify_kernel(h_ref, w_ref, tok_ref, max_ref, acc_ref, best_ref,
             max_ref[...] = jnp.full((1, 1), best_ref[0, 0], jnp.float32)
 
 
+def _pick_vocab_block(V: int, block_v: int):
+    """Shared no-copy block choice (see argmax_verify_fused's comment)."""
+    fitted = _fit_block(V, min(block_v, V))
+    if fitted >= min(128, V):
+        return fitted, 0
+    block_v = min(block_v, V)
+    return block_v, (-V) % block_v
+
+
 def argmax_verify_fused(hn: jnp.ndarray, lm_head: jnp.ndarray,
                         block_v: int = 512, block_d: int = 512
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -189,12 +206,8 @@ def argmax_verify_fused(hn: jnp.ndarray, lm_head: jnp.ndarray,
     # kernel exists to avoid. Only pathological vocabs (e.g. minicpm's
     # odd 122753, where fitting degrades to tiny blocks) take the pad
     # path; padded columns are masked to -inf inside the kernel.
-    fitted = _fit_block(V, min(block_v, V))
-    if fitted >= min(128, V):
-        block_v, pad_v = fitted, 0
-    else:
-        block_v = min(block_v, V)
-        pad_v = (-V) % block_v
+    block_v, pad_v = _pick_vocab_block(V, block_v)
+    if pad_v:
         lm_head = jnp.pad(lm_head, ((0, 0), (0, pad_v)))
     nv = (V + pad_v) // block_v
 
@@ -230,3 +243,108 @@ def argmax_verify_fused(hn: jnp.ndarray, lm_head: jnp.ndarray,
     )
     tok, mx = fn(hn, lm_head)
     return tok[:, 0], mx[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# top-k verify: streaming LM-head top-k (draft proposal — propose_topk)
+# ---------------------------------------------------------------------------
+def _topk_kernel(h_ref, w_ref, ids_ref, vals_ref, acc_ref, run_v_ref,
+                 run_i_ref, *, V: int, k: int, block_v: int, nv: int,
+                 nd: int):
+    v = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((v == 0) & (d == 0))
+    def _init_row():
+        run_v_ref[...] = jnp.full_like(run_v_ref, NEG_INF)
+        run_i_ref[...] = jnp.zeros_like(run_i_ref)
+
+    h = h_ref[...].astype(jnp.float32)            # (1, Dt)
+    w = w_ref[...].astype(jnp.float32)            # (Dt, Vt)
+    acc_ref[...] += jnp.dot(h, w, preferred_element_type=jnp.float32)
+
+    @pl.when(d == nd - 1)
+    def _fold_tile():
+        col = v * block_v + jax.lax.broadcasted_iota(jnp.int32,
+                                                     acc_ref.shape, 1)
+        tile_v = jnp.where(col < V, acc_ref[...], NEG_INF)     # (1, Vt)
+        # merged candidate pool: running list FIRST so equal values resolve
+        # to the earlier (lower-id) entry under argmax's lowest-index rule
+        pool_v = jnp.concatenate([run_v_ref[...], tile_v], axis=1)
+        pool_i = jnp.concatenate([run_i_ref[...], col], axis=1)
+        lane = jax.lax.broadcasted_iota(jnp.int32, pool_v.shape, 1)
+        new_v = jnp.full((1, k), NEG_INF, jnp.float32)
+        new_i = jnp.zeros((1, k), jnp.int32)
+        slot = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+        for j in range(k):                         # static unroll, k is tiny
+            best = jnp.max(pool_v)
+            arg = jnp.argmax(pool_v[0, :]).astype(jnp.int32)
+            new_v = jnp.where(slot == j, best, new_v)
+            new_i = jnp.where(slot == j, pool_i[0, arg], new_i)
+            pool_v = jnp.where(lane == arg, NEG_INF, pool_v)
+        run_v_ref[...] = new_v
+        run_i_ref[...] = new_i
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            ids_ref[...] = run_i_ref[...]
+            vals_ref[...] = run_v_ref[...]
+
+
+def topk_verify_fused(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
+                      block_v: int = 512, block_d: int = 512
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """hn: (B, D); lm_head: (D, V); k: static top-k width.
+
+    Returns (ids (B, k) int32, vals (B, k) fp32) sorted by descending
+    logit (ties: ascending vocab id), with fp32 accumulation, reading the
+    LM head exactly once and never materializing the (B, V) logits.
+    """
+    B, D = hn.shape
+    V = lm_head.shape[1]
+    assert k <= V, (k, V)
+    block_d = _fit_block(D, block_d)
+    nd = D // block_d
+    block_v, pad_v = _pick_vocab_block(V, block_v)
+    if pad_v:
+        lm_head = jnp.pad(lm_head, ((0, 0), (0, pad_v)))
+    nv = (V + pad_v) // block_v
+    assert k <= block_v, (k, block_v)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(B, nv, nd),
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda b, v, d: (b, d)),
+            pl.BlockSpec((block_d, block_v), lambda b, v, d: (d, v)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, v, d: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, v, d: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_v), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+    )
+    from repro.kernels import interpret_default, tpu_compiler_params
+    fn = pl.pallas_call(
+        functools.partial(_topk_kernel, V=V, k=k, block_v=block_v, nv=nv,
+                          nd=nd),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret_default(),
+        name="specee_topk_verify",
+    )
+    ids, vals = fn(hn, lm_head)
+    return ids, vals

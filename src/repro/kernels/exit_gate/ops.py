@@ -51,6 +51,20 @@ def resolve_impl(impl: Optional[str], cpu_default: str = "xla") -> str:
 _resolve = resolve_impl
 
 
+def impl_for_flags(flags) -> str:
+    """Exit-gate backend a ``ModelFlags`` bundle selects.
+
+    This is THE single resolution point for ``ModelFlags.exit_gate_kernel``:
+    the decode strategies (repro.api), the engine step functions, and the
+    draft proposal all call it instead of re-reading the flags at every call
+    site. With the flag off every entry point pins the historical "ref"
+    numerics bit-for-bit.
+    """
+    fused = getattr(flags, "exit_gate_kernel", False)
+    return (getattr(flags, "exit_gate_impl", "auto") or "auto") if fused \
+        else "ref"
+
+
 def _index_bank(predictors, ep):
     """Slice one predictor out of the stacked (E, ...) bank."""
     from repro.core.predictor import predictor_at
@@ -95,17 +109,12 @@ def exit_gate(hn: jnp.ndarray, lm_head: jnp.ndarray, spec_ids: jnp.ndarray,
 def _verify_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray,
                           block_v: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """lax.scan over vocab tiles with a running (max, argmax) carry."""
-    from repro.kernels.exit_gate.exit_gate import _fit_block
+    from repro.kernels.exit_gate.exit_gate import _pick_vocab_block
     B, D = hn.shape
     V = lm_head.shape[1]
     # same no-copy preference as the kernel: only pad for vocabs where no
     # reasonable block divides V
-    fitted = _fit_block(V, min(block_v, V))
-    if fitted >= min(128, V):
-        block_v, pad_v = fitted, 0
-    else:
-        block_v = min(block_v, V)
-        pad_v = (-V) % block_v
+    block_v, pad_v = _pick_vocab_block(V, block_v)
     wp = jnp.pad(lm_head, ((0, 0), (0, pad_v))) if pad_v else lm_head
     nv = (V + pad_v) // block_v
     hf = hn.astype(jnp.float32)
@@ -149,3 +158,62 @@ def verify_argmax(hn: jnp.ndarray, lm_head: jnp.ndarray,
     if impl == "xla":
         return _verify_streaming_xla(hn, lm_head, block_v)
     return gate_ref.verify_argmax_ref(hn, lm_head, compute_dtype=hn.dtype)
+
+
+def _topk_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
+                        block_v: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """lax.scan over vocab tiles with a running (vals, ids) top-k carry.
+
+    The carry is prepended to each tile before ``top_k`` so ties resolve to
+    the earlier (lower-id) entry — bit-matching ``jax.lax.top_k`` on the
+    materialized logits.
+    """
+    from repro.kernels.exit_gate.exit_gate import _pick_vocab_block
+    B, D = hn.shape
+    V = lm_head.shape[1]
+    block_v, pad_v = _pick_vocab_block(V, block_v)
+    wp = jnp.pad(lm_head, ((0, 0), (0, pad_v))) if pad_v else lm_head
+    nv = (V + pad_v) // block_v
+    hf = hn.astype(jnp.float32)
+    lanes = jnp.arange(block_v)
+
+    def body(carry, v):
+        cvals, cids = carry                                    # (B, k) each
+        w = jax.lax.dynamic_slice_in_dim(wp, v * block_v, block_v, axis=1)
+        tile = hf @ w.astype(jnp.float32)                      # (B, Vt)
+        col = v * block_v + lanes
+        tile = jnp.where(col[None, :] < V, tile, -jnp.inf)
+        pool_v = jnp.concatenate([cvals, tile], axis=1)        # (B, k+Vt)
+        pool_i = jnp.concatenate(
+            [cids, jnp.broadcast_to(col[None, :], tile.shape)], axis=1)
+        nvals, sel = jax.lax.top_k(pool_v, k)
+        nids = jnp.take_along_axis(pool_i, sel, axis=1)
+        return (nvals, nids.astype(jnp.int32)), None
+
+    init = (jnp.full((B, k), -jnp.inf, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+    (vals, ids), _ = jax.lax.scan(body, init, jnp.arange(nv))
+    return ids, vals
+
+
+@partial(jax.jit, static_argnames=("k", "impl", "block_v", "block_d"))
+def verify_topk(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
+                impl: Optional[str] = None, block_v: int = 512,
+                block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-LM-head top-k — the streaming sibling of ``verify_argmax`` for
+    the draft proposal path. hn: (B, D); lm_head: (D, V).
+
+    "kernel"/"xla" tile the vocab keeping a running per-row top-k with fp32
+    accumulation and never materialize (B, V); "ref" is ``propose_topk``'s
+    historical materialized matmul in ``hn.dtype`` + ``jax.lax.top_k``. Auto
+    resolves like ``verify_argmax`` (kernel on TPU, ref on CPU). Returns
+    (ids (B, k) int32, vals (B, k) fp32), descending by logit.
+    """
+    impl = _resolve(impl, cpu_default="ref")
+    if impl == "kernel":
+        from repro.kernels.exit_gate.exit_gate import topk_verify_fused
+        return topk_verify_fused(hn, lm_head, k, block_v=block_v,
+                                 block_d=block_d)
+    if impl == "xla":
+        return _topk_streaming_xla(hn, lm_head, k, block_v)
+    return gate_ref.verify_topk_ref(hn, lm_head, k, compute_dtype=hn.dtype)

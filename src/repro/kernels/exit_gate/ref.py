@@ -47,3 +47,19 @@ def verify_argmax_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
     logits = (hn.astype(dt) @ lm_head.astype(dt)).astype(jnp.float32)
     return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
             jnp.max(logits, axis=-1))
+
+
+def verify_topk_ref(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
+                    compute_dtype: Optional[jnp.dtype] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-head top-k via materialized (B, V) logits (``jax.lax.top_k``).
+
+    compute_dtype=None accumulates in fp32 (the kernel's contract);
+    compute_dtype=hn.dtype is ``propose_topk``'s historical behaviour
+    (``model.logits`` matmuls in the activation dtype).
+    Returns (ids (B, k) int32, vals (B, k) fp32).
+    """
+    dt = jnp.float32 if compute_dtype is None else compute_dtype
+    logits = (hn.astype(dt) @ lm_head.astype(dt)).astype(jnp.float32)
+    vals, ids = jax.lax.top_k(logits, k)
+    return ids.astype(jnp.int32), vals

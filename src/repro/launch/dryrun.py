@@ -27,9 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DenseStrategy, SpecEEStrategy
 from repro.config import RunConfig, ShapeCell, applicable_shapes, shape_by_name
 from repro.configs import ARCHS, get_config
-from repro.core import engine as eng
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 from repro.models.model import Model, ModelFlags, build_model
@@ -66,18 +66,22 @@ def step_fn_for(model: Model, run: RunConfig, cell: ShapeCell,
                 return logits
             return encoder_step
         return prefill_step
-    # decode: the SpecEE AR serve step (the paper's technique) or dense
+    # decode: the SpecEE AR serve step (the paper's technique) or dense —
+    # both through the unified strategy API (the same jittable step the
+    # serving engine's DecodeSession drives)
     if run.specee.enabled and not dense_decode:
+        strat = SpecEEStrategy()
+
         def serve_step(params, sw, state):
-            token, new_state, info = eng.ar_decode_step(model, params, sw,
-                                                        state)
-            return token, new_state, info.exit_point
+            res, new_state = strat.step(model, params, sw, state)
+            return res.tokens, new_state, res.exit_layer
         return serve_step
 
+    dense = DenseStrategy()
+
     def dense_serve_step(params, sw, state):
-        token, new_state, info = eng.dense_decode_step(model, params, sw,
-                                                       state)
-        return token, new_state
+        res, new_state = dense.step(model, params, sw, state)
+        return res.tokens, new_state
     return dense_serve_step
 
 

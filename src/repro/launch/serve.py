@@ -1,11 +1,15 @@
-"""Production serving launcher: continuous batching + SpecEE.
+"""Production serving launcher: continuous batching over the unified
+decode API (``repro.api``) with SpecEE as the default fast path.
 
 Smoke usage (CPU):
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
         --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --mode tree --requests 4
 
-The full-scale path is the same engine jit'd against the production mesh
-(see launch/dryrun.py, which lowers exactly this serve step for every
+The serving engine defaults the fused exit-gate pipeline ON
+(serve-path adoption; pass --no-fused-gate to pin the reference path).
+The full-scale path is the same strategy step jit'd against the production
+mesh (see launch/dryrun.py, which lowers exactly this serve step for every
 assigned architecture × decode shape).
 """
 from __future__ import annotations
@@ -23,10 +27,22 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--no-specee", action="store_true")
+    ap.add_argument("--mode", default="specee",
+                    choices=["specee", "dense", "tree"],
+                    help="decode strategy behind the serving engine")
+    ap.add_argument("--no-specee", action="store_true",
+                    help="alias for --mode dense (back-compat)")
+    ap.add_argument("--no-fused-gate", action="store_true",
+                    help="pin the reference (unfused) exit-gate path")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for --mode dense "
+                         "(0 = greedy)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for the session (--temperature > 0)")
     ap.add_argument("--trained", action="store_true",
                     help="train draft+predictors first (slower start)")
     args = ap.parse_args()
+    mode = "dense" if args.no_specee else args.mode
 
     from repro.configs import get_config
     from repro.core import engine as eng
@@ -44,7 +60,16 @@ def main() -> None:
         params = model.init(jax.random.PRNGKey(0))
         sw = eng.init_specee(model, jax.random.PRNGKey(1))
 
-    engine = ServingEngine(model, params, sw, specee=not args.no_specee)
+    strategy = mode
+    if args.temperature > 0.0:
+        if mode != "dense":
+            ap.error("--temperature requires --mode dense (SpecEE "
+                     "verification is argmax-defined; see ROADMAP)")
+        from repro.api import DenseStrategy
+        strategy = DenseStrategy(temperature=args.temperature)
+    engine = ServingEngine(model, params, sw, strategy=strategy,
+                           prng_seed=args.seed,
+                           fused_gate=not args.no_fused_gate)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(rng.integers(0, run.model.vocab_size,
@@ -55,10 +80,14 @@ def main() -> None:
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, specee={not args.no_specee})")
+          f"({toks/dt:.1f} tok/s, mode={mode}, "
+          f"fused_gate={not args.no_fused_gate})")
     for r in done:
-        print(f"  req {r.uid}: {len(r.output)} tokens "
-              f"exits={sum(1 for e in r.exit_points if e < model.num_exit_points)}")
+        line = (f"  req {r.uid}: {len(r.output)} tokens "
+                f"exits={sum(1 for e in r.exit_points if e < model.num_exit_points)}")
+        if mode == "tree":
+            line += f" accepted={sum(r.accept_lens)}"
+        print(line)
 
 
 if __name__ == "__main__":

@@ -800,6 +800,16 @@ class Model:
     def decode_step(self, params: Params, token: jnp.ndarray, cache: Any
                     ) -> Tuple[jnp.ndarray, Any]:
         """token: (B,) int32. Returns (logits (B, V) fp32, new cache)."""
+        h, cache = self.decode_step_hidden(params, token, cache)
+        return self.logits(params, h), cache
+
+    def decode_step_hidden(self, params: Params, token: jnp.ndarray,
+                           cache: Any) -> Tuple[jnp.ndarray, Any]:
+        """Full-depth decode returning the PRE-final-norm hidden instead of
+        logits — the emit (LM head) is the caller's: ``dense_decode_step``
+        streams it through ``verify_argmax`` so greedy dense decode never
+        materializes the (B, V) logits either.
+        token: (B,) int32. Returns (h (B, D), new cache)."""
         h = self.embed(params, token[:, None])[:, 0, :]          # (B, D)
         pos = cache["len"]
         new_segs = []
@@ -834,8 +844,7 @@ class Model:
                 h, new_seg_cache = jax.lax.scan(
                     body, h, (params["segments"][seg], seg_cache))
             new_segs.append(new_seg_cache)
-        logits = self.logits(params, h)
-        return logits, {"segments": new_segs, "len": pos + 1}
+        return h, {"segments": new_segs, "len": pos + 1}
 
 
 def build_model(run: RunConfig, flags: ModelFlags = ModelFlags()) -> Model:

@@ -1,34 +1,39 @@
-"""Continuous-batching serving engine with SpecEE as the decode fast path.
+"""Continuous-batching serving engine — a thin slot loop over ``DecodeSession``.
 
 vLLM-style slot model adapted to JAX's static shapes:
-  * ``max_batch`` slots share one batched DecodeState (caches are (B, S, …));
+  * ``max_batch`` slots share one batched ``DecodeSession``;
   * arriving requests are prefilled individually (batch-1 prefill — the
-    expensive, variable-length op) and their rows are *inserted* into the
-    batched state; per-row cache lengths make ragged prompts first-class;
-  * every engine tick runs ONE batched ``ar_decode_step`` (SpecEE) or dense
-    step for all live slots; finished rows (EOS / max_new) retire and free
-    their slot — exactly the iteration-level scheduling of Orca/vLLM;
+    expensive, variable-length op) and *inserted* into a free row
+    (``session.prefill_row``); per-row cache lengths make ragged prompts
+    first-class;
+  * every engine tick runs ONE batched strategy step for all live slots —
+    dense, AR-SpecEE, or tree speculative decoding behind the same
+    ``StepResult`` surface (tree serving emits up to depth+1 tokens per
+    tick); finished rows (EOS / max_new, tracked by the session) retire and
+    free their slot — exactly the iteration-level scheduling of Orca/vLLM;
   * inactive slots are masked; their compute is wasted but bounded (the
     standard TPU static-batch trade-off; see DESIGN.md §3).
 
+Serve-path adoption (ROADMAP): the engine defaults the fused exit-gate
+pipeline ON (``ModelFlags.exit_gate_kernel``) — pass ``fused_gate=False`` to
+pin the reference path. Sampling modes come from ``run.serve`` (greedy /
+temperature) on the dense strategy; ``prng_seed`` seeds the session's PRNG
+stream so sampled runs are reproducible per seed.
+
 This engine is the PC/cloud *logic* deliverable; the multi-pod path lowers
-the same ``ar_decode_step`` through pjit (launch/serve.py).
+the same strategy step through pjit (launch/serve.py, launch/dryrun.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import RunConfig
-from repro.core import engine as eng
-from repro.core import scheduler as sched_lib
-from repro.models.model import Model
+from repro.api import DecodeStrategy, DenseStrategy, Engine, get_strategy
+from repro.models.model import Model, build_model
 
 
 @dataclass
@@ -40,61 +45,40 @@ class Request:
     # filled by the engine
     output: List[int] = field(default_factory=list)
     exit_points: List[int] = field(default_factory=list)
+    accept_lens: List[int] = field(default_factory=list)
     done: bool = False
 
 
-def _insert_row(big, small, row: int, batch: int):
-    """Insert batch-1 pytree ``small`` as row ``row`` of batched ``big``."""
-    def one(b, s):
-        axis = None
-        for i, (db, ds) in enumerate(zip(b.shape, s.shape)):
-            if db == batch and ds == 1:
-                axis = i
-                break
-        if axis is None and b.shape == s.shape:
-            return b  # batch-independent leaf (e.g. PRNG key): keep
-        assert axis is not None, f"no batch axis: {b.shape} vs {s.shape}"
-        idx = [slice(None)] * b.ndim
-        idx[axis] = row
-        src = jnp.squeeze(s, axis=axis)
-        return b.at[tuple(idx)].set(src.astype(b.dtype))
-    return jax.tree_util.tree_map(one, big, small)
-
-
 class ServingEngine:
-    def __init__(self, model: Model, params, sw: eng.SpecEEWeights,
-                 specee: bool = True, prng_seed: int = 0):
+    def __init__(self, model: Model, params, sw=None, specee: bool = True,
+                 strategy: Union[str, DecodeStrategy, None] = None,
+                 prng_seed: int = 0, fused_gate: bool = True):
+        if bool(fused_gate) != getattr(model.flags, "exit_gate_kernel", False):
+            model = build_model(model.run, dataclasses.replace(
+                model.flags, exit_gate_kernel=bool(fused_gate)))
         self.model = model
-        self.params = params
-        self.sw = sw
-        self.specee = specee and model.run.specee.enabled
         self.serve_cfg = model.run.serve
+        if strategy is None:
+            if specee and model.run.specee.enabled:
+                strategy = "specee"
+            elif self.serve_cfg.greedy:
+                strategy = "dense"
+            else:
+                strategy = DenseStrategy(
+                    temperature=self.serve_cfg.temperature)
+        self.strategy = get_strategy(strategy)
+        self.engine = Engine.create(model, params, sw=sw,
+                                    strategy=self.strategy)
         B = self.serve_cfg.max_batch
         S = self.serve_cfg.max_seq_len
         self.B, self.S = B, S
+        self.session = self.engine.new_session(batch=B, max_seq=S,
+                                               prng_seed=prng_seed)
         self.slots: List[Optional[Request]] = [None] * B
-        self.remaining = np.zeros(B, np.int64)
         self.pending: List[Request] = []
-        self._state = self._empty_state()
-        self._active = np.zeros(B, bool)
-        self._step_jit = jax.jit(self._step_fn)
         self._uid = itertools.count()
 
-    # ----- state plumbing -----
-    def _empty_state(self) -> eng.DecodeState:
-        m, B, S = self.model, self.B, self.S
-        from repro.core import draft as draft_lib
-        from repro.models.common import dtype_of
-        cache = m.empty_cache(B, S)
-        dcache = draft_lib.draft_cache(m.cfg, B, S, dtype_of(m.cfg.dtype))
-        return eng.DecodeState(
-            cache=cache, draft_cache=dcache,
-            sched=sched_lib.init_state(B, m.run.specee),
-            last_token=jnp.zeros((B,), jnp.int32),
-            h_last=jnp.zeros((B, m.cfg.d_model),
-                             dtype_of(m.cfg.dtype)),
-            prng=jax.random.PRNGKey(0))
-
+    # ----- request intake -----
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_token: Optional[int] = None) -> Request:
         req = Request(uid=next(self._uid), prompt=np.asarray(prompt, np.int32),
@@ -103,61 +87,51 @@ class ServingEngine:
         return req
 
     # ----- admission: batch-1 prefill, insert into slot -----
-    def _admit(self) -> None:
+    def _admit(self) -> List[Request]:
+        """Fill free slots from the pending queue; retires requests whose
+        prefill already finished them (max_new == 1 or first token == EOS)."""
+        finished: List[Request] = []
         for slot in range(self.B):
             if self.slots[slot] is not None or not self.pending:
                 continue
             req = self.pending.pop(0)
-            tokens = jnp.asarray(req.prompt[None, :])       # (1, T)
-            first, st1 = eng.init_decode_state(
-                self.model, self.params, self.sw, {"tokens": tokens},
-                max_seq=self.S)
-            self._state = eng.DecodeState(*[
-                _insert_row(big, small, slot, self.B)
-                for big, small in zip(self._state, st1)])
-            req.output.append(int(first[0]))
-            self.slots[slot] = req
-            self.remaining[slot] = req.max_new_tokens - 1
-            self._active[slot] = True
+            first = self.session.prefill_row(
+                slot, req.prompt, max_new_tokens=req.max_new_tokens,
+                eos_token=req.eos_token)
+            if req.max_new_tokens > 0:
+                req.output.append(first)
+            if self.session.row_done(slot):
+                req.done = True
+                finished.append(req)
+            else:
+                self.slots[slot] = req
+        return finished
 
     # ----- one batched decode tick -----
-    def _step_fn(self, params, sw, state):
-        if self.specee:
-            return eng.ar_decode_step(self.model, params, sw, state)
-        return eng.dense_decode_step(self.model, params, sw, state)
-
     def step(self) -> List[Request]:
-        """Admit, decode one token for all live slots, retire finished.
-        Returns the list of requests completed this tick."""
-        self._admit()
-        if not self._active.any():
-            return []
-        token, new_state, info = self._step_jit(self.params, self.sw,
-                                                self._state)
-        self._state = new_state
-        token_h = np.asarray(token)
-        exit_h = np.asarray(info.exit_point)
-        finished: List[Request] = []
+        """Admit, decode one strategy step for all live slots, retire
+        finished. Returns the list of requests completed this tick."""
+        finished = self._admit()
+        if not np.any(self.session.live_rows()):
+            return finished
+        res = self.session.step()
         for slot in range(self.B):
             req = self.slots[slot]
-            if req is None or not self._active[slot]:
+            if req is None:
                 continue
-            tok = int(token_h[slot])
-            req.output.append(tok)
-            req.exit_points.append(int(exit_h[slot]))
-            self.remaining[slot] -= 1
-            if self.remaining[slot] <= 0 or (req.eos_token is not None
-                                             and tok == req.eos_token):
+            req.output.extend(res.row_tokens(slot))
+            req.exit_points.append(int(res.exit_layer[slot]))
+            req.accept_lens.append(int(res.accept_len[slot]))
+            if res.done[slot]:
                 req.done = True
                 finished.append(req)
                 self.slots[slot] = None
-                self._active[slot] = False
         return finished
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not self.pending and not self._active.any():
+            if not self.pending and not np.any(self.session.live_rows()):
                 break
         return done

@@ -97,6 +97,58 @@ def test_verify_argmax_tie_breaks_to_first():
         np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref_tok))
 
 
+# ---------------- streaming top-k verify vs oracle ----------------
+TOPK_SHAPES = [(4, 256, 512, 4), (3, 384, 1001, 4), (2, 320, 777, 5),
+               (1, 200, 65, 3), (26, 128, 512, 4)]
+
+
+@pytest.mark.parametrize("B,D,V,k", TOPK_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["kernel", "xla"])
+def test_verify_topk_matches_ref(B, D, V, k, dtype, impl):
+    """The streaming top-k (draft proposal path) id-matches ``jax.lax.top_k``
+    on the materialized logits, including order."""
+    from repro.kernels.exit_gate.ref import verify_topk_ref
+    hn, W, _, _ = _inputs(B, D, V, k, dtype, seed=11)
+    ids, vals = gate_ops.verify_topk(hn, W, k, impl=impl, block_v=256)
+    ids_r, vals_r = verify_topk_ref(hn, W, k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_r))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(vals, vals_r, atol=tol, rtol=tol)
+
+
+def test_verify_topk_tie_breaks_to_first():
+    """Duplicate LM-head columns across vocab tiles: the running top-k must
+    keep the lowest ids in jnp.top_k's order."""
+    from repro.kernels.exit_gate.ref import verify_topk_ref
+    hn = jnp.ones((2, 128))
+    W = jax.random.normal(jax.random.PRNGKey(2), (128, 300)) * 0.1
+    col = W[:, jnp.argmax((hn @ W)[0])]
+    W = W.at[:, 17].set(col).at[:, 210].set(col)
+    ids_r, _ = verify_topk_ref(hn, W, 4)
+    for impl in ("kernel", "xla"):
+        ids, _ = gate_ops.verify_topk(hn, W, 4, impl=impl, block_v=128)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_r))
+
+
+def test_propose_topk_streams_through_gate():
+    """propose_topk keeps its historical numerics ("ref" impl) and id-matches
+    the streaming impls under the fused flag."""
+    run = get_config("llama2-7b").smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    from repro.core import draft as draft_lib
+    h = jax.random.normal(jax.random.PRNGKey(6), (3, run.model.d_model))
+    ids, vals = draft_lib.propose_topk(m, params, h, 4)
+    full = m.logits(params, h)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(jax.lax.top_k(full, 4)[1]))
+    m_fused = build_model(run, ModelFlags(exit_gate_kernel=True,
+                                          exit_gate_impl="kernel"))
+    ids_f, _ = draft_lib.propose_topk(m_fused, params, h, 4)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_f))
+
+
 # ---------------- engine equivalence ----------------
 @pytest.fixture(scope="module")
 def setup():

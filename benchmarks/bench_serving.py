@@ -1,0 +1,128 @@
+"""Serving-path A/B: paged vs dense KV cache, chunked vs blocking prefill.
+
+Records ``BENCH_serving.json`` at the repo root so the serving hot loop's
+perf trajectory is tracked across PRs, mirroring ``BENCH_exit_gate.json``:
+
+* tokens/s for a fixed request set through ``ServingEngine``, at 2–3 batch
+  sizes, paged vs dense cache and chunked vs blocking admission;
+* decode tick latency (min over interleaved rounds — the same
+  noise-symmetric min-timing harness as ``bench_predictor``).
+
+CPU numbers are correctness-path datapoints, not perf claims: the paged win
+(skipped pages = skipped HBM traffic) and the chunked win (no head-of-line
+prompt stalls) are TPU stories; what this harness pins is that the managed
+cache and the scheduler do not regress the tick loop.
+
+    python -m benchmarks.bench_serving
+    python -m benchmarks.bench_serving --batches 2 4 --rounds 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import engine as eng
+from repro.models.model import build_model
+from repro.serving import ServingEngine
+
+_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                     "BENCH_serving.json")
+
+
+def _requests(run, n, seed=0, lo=6, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, run.model.vocab_size, int(rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+def _one_round(se, prompts, max_new):
+    """Submit + drain one request set; returns (tokens, wall_s, ticks,
+    min_tick_s). The engine is reused across rounds so jit caches stay warm
+    (compile cost lands in the warmup round only)."""
+    for p in prompts:
+        se.submit(p, max_new_tokens=max_new)
+    ticks = 0
+    min_tick = float("inf")
+    toks = 0
+    t0 = time.perf_counter()
+    while True:
+        t1 = time.perf_counter()
+        done = se.step()
+        dt = time.perf_counter() - t1
+        ticks += 1
+        min_tick = min(min_tick, dt)
+        toks += sum(len(r.output) for r in done)
+        if (not se.scheduler.has_work()
+                and not np.any(se.session.live_rows())):
+            break
+    return toks, time.perf_counter() - t0, ticks, min_tick
+
+
+def bench(batches, rounds, max_new, requests_per_slot):
+    base = get_config("llama2-7b").smoke()
+    rows = []
+    for B in batches:
+        run = dataclasses.replace(
+            base, serve=dataclasses.replace(base.serve, max_batch=B))
+        model = build_model(run)
+        params = model.init(jax.random.PRNGKey(0))
+        sw = eng.init_specee(model, jax.random.PRNGKey(1))
+        prompts = _requests(run, B * requests_per_slot, seed=B)
+
+        variants = {
+            "paged+chunked": dict(cache="paged"),
+            "paged+blocking": dict(cache="paged", prefill_chunk=0),
+            "dense+chunked": dict(cache="dense"),
+            "dense+blocking": dict(cache="dense", prefill_chunk=0),
+        }
+        engines = {name: ServingEngine(model, params, sw, strategy="specee",
+                                       **kw)
+                   for name, kw in variants.items()}
+        best = {name: {"tok_s": 0.0, "tick_us": float("inf")}
+                for name in variants}
+        for name, se in engines.items():            # warmup (compile)
+            _one_round(se, prompts, max_new)
+        for _ in range(rounds):                     # interleaved min-timing
+            for name, se in engines.items():
+                toks, dt, ticks, min_tick = _one_round(se, prompts, max_new)
+                best[name]["tok_s"] = max(best[name]["tok_s"], toks / dt)
+                best[name]["tick_us"] = min(best[name]["tick_us"],
+                                            min_tick * 1e6)
+                best[name]["ticks"] = ticks
+                best[name]["tokens"] = toks
+        for name in variants:
+            se = engines[name]
+            row = {"batch": B, "variant": name,
+                   "cache": se.cache_spec.kind,
+                   "prefill_chunk": se.scheduler.chunk_tokens or 0,
+                   "page_size": se.cache_spec.page_size,
+                   "tokens_per_s": round(best[name]["tok_s"], 2),
+                   "min_tick_us": round(best[name]["tick_us"], 1),
+                   "ticks": best[name]["ticks"],
+                   "tokens": best[name]["tokens"],
+                   "backend": jax.default_backend()}
+            rows.append(row)
+            print(f"[bench_serving] B={B} {name:16s} "
+                  f"{row['tokens_per_s']:8.1f} tok/s  "
+                  f"tick={row['min_tick_us']:8.1f}us  ticks={row['ticks']}")
+    with open(_JSON, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[bench_serving] wrote {_JSON}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, nargs="+", default=[2, 4, 8])
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--requests-per-slot", type=int, default=2)
+    args = ap.parse_args()
+    bench(args.batches, args.rounds, args.max_new, args.requests_per_slot)

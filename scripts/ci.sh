@@ -27,4 +27,10 @@ if [ "$#" -eq 0 ]; then
   echo "[ci] examples/serve_specee.py --ci (smoke)"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python examples/serve_specee.py --ci
+  # paged-cache serving smoke: exercises the KVCacheManager page-table path
+  # and the chunked-prefill scheduler on every run (page leak + budget
+  # asserts live behind --ci)
+  echo "[ci] launch/serve.py --ci --page-size 16 (paged smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --page-size 16
 fi

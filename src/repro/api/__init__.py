@@ -13,12 +13,21 @@ same essential characteristics" — lifted into the public API:
 
 Strategies are pluggable (``DenseStrategy``, ``SpecEEStrategy``,
 ``TreeStrategy`` or any ``DecodeStrategy`` subclass); the step functions in
-``repro.core.engine`` remain the jittable kernels-of-record underneath. The
-serving engine (``repro.serving``) is a thin continuous-batching loop over
-``DecodeSession``; see docs/api.md for the migration table from the old
-direct step-function calls.
+``repro.core.engine`` remain the jittable kernels-of-record underneath.
+
+Session memory and admission are first-class (PR 3):
+``repro.api.cache`` owns the KV layout (``KVCacheManager``: paged pools +
+page table, or the bit-identical dense reference) and
+``repro.api.scheduler`` owns admission (``ChunkedPrefillScheduler``:
+Sarathi-style chunked prefill interleaved with decode ticks). The serving
+engine (``repro.serving``) composes exactly these; see docs/api.md for the
+migration table from the old direct step-function calls and from
+``prefill_row``-only admission.
 """
-from repro.api.session import DecodeSession, Engine
+from repro.api.cache import (CacheSpec, DenseKVCache, KVCacheManager,
+                             PagedKVCache, make_cache_manager)
+from repro.api.scheduler import Admitted, ChunkedPrefillScheduler
+from repro.api.session import Admission, DecodeSession, Engine
 from repro.api.strategies import (DecodeStrategy, DenseStrategy,
                                   SpecEEStrategy, TreeStrategy, get_strategy)
 from repro.api.types import StepResult
@@ -26,4 +35,6 @@ from repro.api.types import StepResult
 __all__ = [
     "Engine", "DecodeSession", "StepResult", "DecodeStrategy",
     "DenseStrategy", "SpecEEStrategy", "TreeStrategy", "get_strategy",
+    "CacheSpec", "KVCacheManager", "DenseKVCache", "PagedKVCache",
+    "make_cache_manager", "ChunkedPrefillScheduler", "Admitted", "Admission",
 ]

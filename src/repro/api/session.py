@@ -12,46 +12,45 @@ one batched ``DecodeState`` plus the host-side bookkeeping jit can't express:
 per-row token budgets, EOS cut-off, and the ``done`` mask of the canonical
 ``StepResult``.
 
+Session memory is owned by a ``KVCacheManager`` (``repro.api.cache``):
+``new_session(..., cache="paged")`` swaps the slot-masked dense layout for
+paged pools + a page table with zero changes to the step loop, and
+``retire_row`` compacts a finished row (frees its pages, zeroes its length)
+so idle slots stop paying attention span.
+
 Two session styles:
   * whole-batch: ``prefill(prompts)`` then ``step()`` — examples, benchmarks;
   * slot-based (continuous batching): ``new_session(batch=B, max_seq=S)``
-    pre-allocates empty rows; ``prefill_row(slot, prompt)`` admits a request
-    into one row (batch-1 prefill + insert) while other rows keep decoding —
-    the serving engine is a thin loop over exactly this.
+    pre-allocates empty rows; admission is either one-shot
+    (``prefill_row(slot, prompt)``) or chunked Sarathi-style
+    (``begin_admission`` + ``prefill_chunk``), which splits the prompt
+    forward into fixed-token chunks so the serving loop can interleave them
+    with decode ticks instead of stalling on long prompts.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Union
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core import draft as draft_lib
+from repro.core import scheduler as sched_lib
 from repro.models.model import Model
 
+from repro.api.cache import (CacheSpec, KVCacheManager, insert_row_pytree,
+                             make_cache_manager)
 from repro.api.strategies import DecodeStrategy, get_strategy
 from repro.api.types import StepResult
 
 _NO_BUDGET = np.iinfo(np.int64).max
 
-
-def _insert_row(big, small, row: int, batch: int):
-    """Insert batch-1 pytree ``small`` as row ``row`` of batched ``big``."""
-    def one(b, s):
-        axis = None
-        for i, (db, ds) in enumerate(zip(b.shape, s.shape)):
-            if db == batch and ds == 1:
-                axis = i
-                break
-        if axis is None and b.shape == s.shape:
-            return b  # batch-independent leaf (e.g. PRNG key): keep
-        assert axis is not None, f"no batch axis: {b.shape} vs {s.shape}"
-        idx = [slice(None)] * b.ndim
-        idx[axis] = row
-        src = jnp.squeeze(s, axis=axis)
-        return b.at[tuple(idx)].set(src.astype(b.dtype))
-    return jax.tree_util.tree_map(one, big, small)
+# back-compat alias: the row-insert helper moved to repro.api.cache so the
+# cache managers share it
+_insert_row = insert_row_pytree
 
 
 class Engine:
@@ -67,6 +66,8 @@ class Engine:
         strat = self.strategy
         self._step_jit = jax.jit(
             lambda p, s, st: strat.step(model, p, s, st))
+        self._extend_jit = jax.jit(
+            lambda p, toks, cache, n: model.prefill_extend(p, toks, cache, n))
 
     @classmethod
     def create(cls, model: Model, params, sw=None,
@@ -81,30 +82,75 @@ class Engine:
 
     def new_session(self, batch: Optional[int] = None,
                     max_seq: Optional[int] = None,
-                    prng_seed: int = 0) -> "DecodeSession":
+                    prng_seed: int = 0,
+                    cache: Union[None, str, CacheSpec] = None
+                    ) -> "DecodeSession":
         """``batch=None``: empty shell, populated by ``prefill(prompts)``.
         ``batch=B``: pre-allocated empty rows for slot-based serving
-        (``max_seq`` defaults to the run's ``serve.max_seq_len``)."""
+        (``max_seq`` defaults to the run's ``serve.max_seq_len``).
+        ``cache``: "dense" (default) | "paged" | a ``CacheSpec`` — the
+        KVCacheManager layout session memory lives in."""
         return DecodeSession(self, batch=batch, max_seq=max_seq,
-                             prng_seed=prng_seed)
+                             prng_seed=prng_seed, cache=cache)
+
+
+@dataclass
+class Admission:
+    """One in-flight chunked prefill (host-side handle).
+
+    Created by ``DecodeSession.begin_admission``; each ``prefill_chunk`` call
+    advances ``consumed`` by at most one chunk of prompt tokens. When the
+    prompt is exhausted the session inserts the finished batch-1 state into
+    ``row`` and ``first_token`` is set.
+    """
+    row: int
+    tokens: np.ndarray
+    max_new_tokens: Optional[int] = None
+    eos_token: Optional[int] = None
+    consumed: int = 0
+    cache: Any = None               # batch-1 dense extend cache
+    h_parts: List[Any] = field(default_factory=list)
+    first_token: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def complete(self) -> bool:
+        return self.first_token is not None
+
+    @property
+    def remaining(self) -> int:
+        return self.prompt_len - self.consumed
 
 
 class DecodeSession:
     def __init__(self, engine: Engine, batch: Optional[int] = None,
-                 max_seq: Optional[int] = None, prng_seed: int = 0):
+                 max_seq: Optional[int] = None, prng_seed: int = 0,
+                 cache: Union[None, str, CacheSpec] = None):
         self.engine = engine
         self._prng_seed = prng_seed
         self._max_seq = max_seq
+        self._cache_spec = CacheSpec.resolve(cache, engine.model.run.serve)
         self._state: Optional[eng.DecodeState] = None
+        self.cache_mgr: Optional[KVCacheManager] = None
         self.batch: Optional[int] = None
         if batch is not None:
             if max_seq is None:
                 max_seq = engine.model.run.serve.max_seq_len
                 self._max_seq = max_seq
+            self.cache_mgr = self._make_manager(batch, max_seq)
             self._state = engine.strategy.empty_state(
                 engine.model, engine.sw, batch, max_seq,
-                prng=jax.random.PRNGKey(prng_seed))
+                prng=jax.random.PRNGKey(prng_seed),
+                cache=self.cache_mgr.empty_cache())
             self._alloc_bookkeeping(batch, live=False)
+
+    def _make_manager(self, batch: int, max_seq: int) -> KVCacheManager:
+        e = self.engine
+        seq = e.strategy.cache_seq_len(e.model, max_seq)
+        return make_cache_manager(e.model, batch, seq, self._cache_spec)
 
     # ----- host-side bookkeeping -----
     def _alloc_bookkeeping(self, batch: int, live: bool) -> None:
@@ -114,6 +160,9 @@ class DecodeSession:
         self._eos: List[Optional[int]] = [None] * batch
         # empty slots count as done until a request is admitted
         self._done = np.full(batch, not live, bool)
+        # rows compacted by retire_row: their logical length is pinned to 0
+        # after every tick (the batched step advances len uniformly)
+        self._retired: set = set()
 
     def _set_row_limits(self, row: int, max_new_tokens: Optional[int],
                         eos_token: Optional[int]) -> None:
@@ -162,6 +211,27 @@ class DecodeSession:
     def live_rows(self) -> np.ndarray:
         return ~self._done
 
+    # ----- cache management -----
+    def can_admit(self, prompt_len: int = 0) -> bool:
+        """Admission control: does the cache manager have room for one more
+        request (paged: a full row reservation of free pages)?"""
+        return self.cache_mgr is None or self.cache_mgr.can_admit(prompt_len)
+
+    def retire_row(self, row: int) -> None:
+        """Per-row compaction: release the finished row's cache footprint so
+        the idle slot stops paying attention span (paged: pages return to
+        the free list; dense: the logical length drops to zero)."""
+        assert self._state is not None and self.cache_mgr is not None
+        self._done[row] = True
+        self._retired.add(row)
+        self._state = self._state._replace(
+            cache=self.cache_mgr.retire_row(self._state.cache, row))
+
+    def row_span(self, row: int) -> int:
+        """Attention span the row currently pays (tests/benchmarks)."""
+        assert self._state is not None and self.cache_mgr is not None
+        return self.cache_mgr.row_span(self._state.cache, row)
+
     # ----- whole-batch entry -----
     def prefill(self, prompts, max_new_tokens: Optional[int] = None,
                 eos_token: Optional[int] = None,
@@ -183,6 +253,9 @@ class DecodeSession:
         first, self._state = e.strategy.init_state(
             e.model, e.params, e.sw, batch, max_seq,
             prng=jax.random.PRNGKey(self._prng_seed))
+        self.cache_mgr = self._make_manager(B, max_seq)
+        self._state = self._state._replace(
+            cache=self.cache_mgr.from_prefill(self._state.cache))
         self._alloc_bookkeeping(B, live=True)
         # the KV cache has max_seq slots: the budget is always bounded by the
         # remaining capacity so a budgetless session still terminates instead
@@ -202,28 +275,129 @@ class DecodeSession:
             units_run=jnp.int32(0))
         return self._wrap(raw)
 
-    # ----- slot-based entry (continuous batching) -----
+    # ----- slot-based admission (continuous batching) -----
+    def _insert_state1(self, row: int, st1: eng.DecodeState, prompt_len: int,
+                       max_new_tokens: Optional[int],
+                       eos_token: Optional[int]) -> int:
+        """Insert a finished batch-1 state into slot ``row`` (cache through
+        the manager, the rest leaf-wise) + budget/EOS accounting. Returns the
+        first token."""
+        st = self._state
+        self._retired.discard(row)
+        cache = self.cache_mgr.insert_row(st.cache, row, st1.cache)
+        B = self.batch
+        self._state = eng.DecodeState(
+            cache=cache,
+            draft_cache=insert_row_pytree(st.draft_cache, st1.draft_cache,
+                                          row, B),
+            sched=insert_row_pytree(st.sched, st1.sched, row, B),
+            last_token=insert_row_pytree(st.last_token, st1.last_token,
+                                         row, B),
+            h_last=insert_row_pytree(st.h_last, st1.h_last, row, B),
+            prng=st.prng,
+        )
+        cap = max(self._max_seq - prompt_len - 1, 1)
+        budget = cap if max_new_tokens is None else min(max_new_tokens, cap)
+        self._set_row_limits(row, budget, eos_token)
+        tok = int(np.asarray(st1.last_token)[0])
+        n = self._account_row(row, np.asarray([tok]), 1)
+        assert n <= 1
+        return tok
+
     def prefill_row(self, row: int, prompt,
                     max_new_tokens: Optional[int] = None,
                     eos_token: Optional[int] = None) -> int:
-        """Admit one request into slot ``row``: batch-1 prefill, insert the
-        resulting rows into the batched state. Returns the first token."""
+        """Admit one request into slot ``row``: blocking batch-1 prefill,
+        insert the resulting rows into the batched state. Returns the first
+        token. (Chunked admission: ``begin_admission``/``prefill_chunk``.)"""
         assert self._state is not None and self.batch is not None, \
             "prefill_row needs a pre-allocated session (new_session(batch=B))"
         e = self.engine
         tokens = jnp.asarray(prompt, jnp.int32)[None, :]
         first, st1 = e.strategy.init_state(e.model, e.params, e.sw,
                                            {"tokens": tokens}, self._max_seq)
-        self._state = eng.DecodeState(*[
-            _insert_row(big, small, row, self.batch)
-            for big, small in zip(self._state, st1)])
-        cap = max(self._max_seq - tokens.shape[1] - 1, 1)
-        budget = cap if max_new_tokens is None else min(max_new_tokens, cap)
-        self._set_row_limits(row, budget, eos_token)
-        tok = int(first[0])
-        n = self._account_row(row, np.asarray([tok]), 1)
-        assert n <= 1
-        return tok
+        return self._insert_state1(row, st1, tokens.shape[1],
+                                   max_new_tokens, eos_token)
+
+    # ----- chunked admission (Sarathi-style) -----
+    def begin_admission(self, row: int, prompt,
+                        max_new_tokens: Optional[int] = None,
+                        eos_token: Optional[int] = None) -> Admission:
+        """Start admitting one request into slot ``row``. The returned handle
+        is advanced by ``prefill_chunk`` — the prompt forward happens there,
+        a chunk per call, so the caller can interleave decode ticks."""
+        assert self._state is not None and self.batch is not None, \
+            "begin_admission needs a pre-allocated session"
+        return Admission(row=row, tokens=np.asarray(prompt, np.int64),
+                         max_new_tokens=max_new_tokens, eos_token=eos_token)
+
+    def prefill_chunk(self, adm: Admission,
+                      max_tokens: Optional[int] = None) -> int:
+        """Run at most ``max_tokens`` prompt tokens of ``adm``'s prefill.
+
+        ``max_tokens=None`` (or an architecture without chunked-prefill
+        support — recurrent/SSD/frontend stacks, DESIGN.md §4) falls back to
+        the blocking one-shot path and completes the admission in one call.
+        Returns the number of prompt tokens processed; when the prompt is
+        exhausted the row is inserted and ``adm.first_token`` is set.
+        """
+        if adm.complete:
+            return 0
+        e = self.engine
+        T = adm.prompt_len
+        if max_tokens is None or not e.model.supports_chunked_prefill():
+            assert adm.consumed == 0, \
+                "cannot fall back to blocking admission mid-chunk"
+            first = self.prefill_row(adm.row, adm.tokens,
+                                     max_new_tokens=adm.max_new_tokens,
+                                     eos_token=adm.eos_token)
+            adm.consumed = T
+            adm.first_token = first
+            return T
+        # chunked path: fixed-width padded chunk through the jitted extend
+        C = int(max_tokens)
+        if adm.cache is None:
+            seq = e.strategy.cache_seq_len(e.model, self._max_seq)
+            adm.cache = e.model.empty_cache(1, seq)
+        n = min(C, adm.remaining)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = adm.tokens[adm.consumed:adm.consumed + n]
+        h, adm.cache = e._extend_jit(e.params, jnp.asarray(chunk), adm.cache,
+                                     jnp.int32(n))
+        adm.h_parts.append(h[:, :n])
+        adm.consumed += n
+        if adm.remaining == 0:
+            self._finish_admission(adm)
+        return n
+
+    def _finish_admission(self, adm: Admission) -> None:
+        """Last chunk done: first token, draft prefill over the accumulated
+        hiddens, batch-1 state assembly, row insert."""
+        e = self.engine
+        model, params, sw = e.model, e.params, e.sw
+        tokens = jnp.asarray(adm.tokens, jnp.int32)[None, :]
+        h_all = jnp.concatenate(adm.h_parts, axis=1)         # (1, T, D)
+        logits = model.logits(params, h_all[:, -1, :])
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sw is not None:
+            seq = e.strategy.cache_seq_len(model, self._max_seq)
+            embeds = model.embed(params, tokens)
+            dcache = draft_lib.draft_prefill(model.cfg, sw.draft, embeds,
+                                             h_all, seq)
+        else:
+            dcache = {}
+        st1 = eng.DecodeState(
+            cache=adm.cache,
+            draft_cache=dcache,
+            sched=sched_lib.init_state(1, model.run.specee),
+            last_token=first,
+            h_last=h_all[:, -1, :],
+            prng=self._state.prng,
+        )
+        adm.first_token = self._insert_state1(
+            adm.row, st1, adm.prompt_len, adm.max_new_tokens, adm.eos_token)
+        adm.cache = None
+        adm.h_parts = []
 
     # ----- decode tick -----
     def step(self) -> StepResult:
@@ -231,4 +405,11 @@ class DecodeSession:
         assert self._state is not None, "prefill first"
         e = self.engine
         raw, self._state = e._step_jit(e.params, e.sw, self._state)
+        if self._retired:
+            # compaction is sticky: the uniform len advance of the batched
+            # step must not regrow a retired row's attention span
+            cache = self._state.cache
+            rows = jnp.asarray(sorted(self._retired), jnp.int32)
+            self._state = self._state._replace(
+                cache=dict(cache, len=cache["len"].at[rows].set(0)))
         return self._wrap(raw)

@@ -69,10 +69,15 @@ class DecodeStrategy:
                                      prng=prng)
 
     def empty_state(self, model: Model, sw, batch: int, max_seq: int,
-                    prng=None) -> eng.DecodeState:
+                    prng=None, cache=None) -> eng.DecodeState:
+        """``cache``: a pre-built cache pytree from the session's
+        ``KVCacheManager`` (dense or paged layout); None keeps the dense
+        allocation. The strategy step functions read the layout off the
+        state itself (``cache["page_table"]``), so one jitted step serves
+        both."""
         return eng.empty_decode_state(model, sw, batch,
                                       self.cache_seq_len(model, max_seq),
-                                      prng=prng)
+                                      prng=prng, cache=cache)
 
     def step(self, model: Model, params, sw, state: eng.DecodeState
              ) -> Tuple[StepResult, eng.DecodeState]:
@@ -143,6 +148,13 @@ class TreeStrategy(DecodeStrategy):
             raise ValueError(
                 "tree strategy requires a pure-attention stack (DESIGN.md "
                 f"§4); {model.cfg.name} is {model.cfg.family}")
+        if model.flags.kv_quant:
+            raise ValueError(
+                "tree strategy does not support kv_quant: tree scratch "
+                "writes are full-precision (the node K/V is re-read within "
+                "the same step, where int8 round-tripping would corrupt "
+                "verification); decode with the AR engine instead "
+                "(DESIGN.md §4)")
 
     def step(self, model, params, sw, state):
         out, n_emit, new_state, info = eng.tree_decode_step(

@@ -291,10 +291,27 @@ class TrainConfig:
 class ServeConfig:
     max_batch: int = 128
     max_seq_len: int = 32768
-    page_size: int = 128             # paged KV block size
+    page_size: int = 128             # paged KV block size (repro.api.cache)
     max_new_tokens: int = 256
     greedy: bool = True
     temperature: float = 1.0
+    # chunked (Sarathi-style) prefill admission: max prompt tokens the serving
+    # scheduler runs per decode tick; 0 = blocking (whole-prompt) admission
+    prefill_chunk: int = 512
+
+    def __post_init__(self) -> None:
+        if self.page_size <= 0:
+            raise ValueError(
+                f"ServeConfig.page_size must be > 0, got {self.page_size}")
+        if self.max_seq_len % self.page_size:
+            raise ValueError(
+                f"ServeConfig.page_size ({self.page_size}) must divide "
+                f"max_seq_len ({self.max_seq_len}) so pages tile the KV "
+                "cache exactly")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                "ServeConfig.prefill_chunk must be >= 0 (0 = blocking "
+                f"admission), got {self.prefill_chunk}")
 
 
 @dataclass(frozen=True)
@@ -312,7 +329,7 @@ class RunConfig:
             train=replace(self.train, global_batch=4, seq_len=32, steps=2,
                           microbatch=0, checkpoint_every=1),
             serve=replace(self.serve, max_batch=2, max_seq_len=128, page_size=16,
-                          max_new_tokens=8),
+                          max_new_tokens=8, prefill_chunk=32),
         )
 
 

@@ -134,13 +134,18 @@ def init_decode_state(model: Model, params: Params,
 
 
 def empty_decode_state(model: Model, sw: Optional[SpecEEWeights], batch: int,
-                       max_seq: int, prng=None) -> DecodeState:
+                       max_seq: int, prng=None, cache=None) -> DecodeState:
     """All-zeros batched state with ``batch`` empty slots — the serving
     engine's starting point: rows are later populated by inserting batch-1
-    ``init_decode_state`` results (continuous batching)."""
+    ``init_decode_state`` results (continuous batching).
+
+    ``cache``: a pre-built cache pytree from a ``KVCacheManager``
+    (``repro.api.cache``) — e.g. the paged pool + page table layout; None
+    keeps the historical dense allocation."""
     dtype = common.dtype_of(model.cfg.dtype)
     return DecodeState(
-        cache=model.empty_cache(batch, max_seq),
+        cache=cache if cache is not None else model.empty_cache(batch,
+                                                                max_seq),
         draft_cache=(draft_lib.draft_cache(model.cfg, batch, max_seq, dtype)
                      if sw is not None else {}),
         sched=sched_lib.init_state(batch, model.run.specee),
@@ -172,6 +177,7 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     k = spec.num_speculative
     gate_impl, _ = _gate_impls(model)
     sh_kernel = getattr(model.flags, "spec_head_kernel", False)
+    pages = state.cache.get("page_table")       # paged KV: table indirection
 
     # ---- 1. speculate: draft proposes k candidate tokens ----
     emb = model.embed(params, state.last_token[:, None])[:, 0, :]
@@ -204,7 +210,8 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
             u, h, seg_cache, exited, exit_token, exit_pt, prev_probs, nrun = c
             live = ~exited
             h_new, seg_cache = model.run_unit(params, seg, u, h, seg_cache,
-                                              pos, live_mask=live)
+                                              pos, live_mask=live,
+                                              pages=pages)
             h = jnp.where(exited[:, None], h, h_new)
             ep = ep_base + u                                   # global exit pt
 
@@ -257,7 +264,8 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
 
         def pbody(c):
             u, seg_cache = c
-            seg_cache = model.propagate_unit(params, seg, u, h, seg_cache, pos)
+            seg_cache = model.propagate_unit(params, seg, u, h, seg_cache,
+                                             pos, pages=pages)
             return u + 1, seg_cache
 
         _, seg_cache = jax.lax.while_loop(pcond, pbody, (u_end, seg_cache))
@@ -275,7 +283,7 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     sched = sched_lib.update(state.sched,
                              jnp.minimum(exit_pt, E - 1))
     new_state = DecodeState(
-        cache={"segments": new_segs, "len": pos + 1},
+        cache=dict(state.cache, segments=new_segs, len=pos + 1),
         draft_cache=draft_cache,
         sched=sched,
         last_token=token,
@@ -365,9 +373,15 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     # the tree gate's predictor stage goes through the Pallas wrapper only
     # when the fused backend actually resolves to the kernel path
     pred_kernel = fused and gate_lib.resolve_impl(gate_impl) == "kernel"
-    # static scratch offset = allocated seq len minus N
+    # static scratch offset = logical capacity minus N; with a paged cache
+    # the capacity is pages_per_row * page_size (table width × pool page dim)
+    pages = state.cache.get("page_table")
     any_k = jax.tree_util.tree_leaves(state.cache["segments"][0])[0]
-    scratch_off = any_k.shape[2] - N
+    if pages is None:
+        capacity = any_k.shape[2]
+    else:
+        capacity = pages.shape[1] * any_k.shape[2]
+    scratch_off = capacity - N
 
     node_tokens, h_nodes_draft, draft_cache = build_tree(
         model, params, sw, state, tree)
@@ -406,7 +420,8 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
             u, h, seg_cache, exited, exit_pt, prev_probs, nrun = c
             live = ~exited
             h_new, seg_cache = model.run_unit_tree(
-                params, seg, u, h, seg_cache, mask, positions, scratch_off)
+                params, seg, u, h, seg_cache, mask, positions, scratch_off,
+                pages=pages)
             h = jnp.where(exited[:, None, None], h, h_new)
             ep = ep_base + u
             act = jnp.take(active, ep, axis=1) & live
@@ -449,7 +464,7 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
         def pbody(c):
             u, sc = c
             sc = model.propagate_unit_tree(params, seg, u, h, sc, positions,
-                                           scratch_off)
+                                           scratch_off, pages=pages)
             return u + 1, sc
 
         _, seg_cache = jax.lax.while_loop(pcond, pbody, (u_end, seg_cache))
@@ -491,7 +506,7 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     n_emit = n_emit + 1
 
     # ---- commit: copy accepted K/V into real cache positions ----
-    cache = {"segments": new_segs, "len": pos0}
+    cache = dict(state.cache, segments=new_segs, len=pos0)
     cache = model.accept_tree_kv(cache, acc_nodes, acc_len, pos0, scratch_off)
     cache["len"] = pos0 + acc_len                           # root + matched
 

@@ -1,0 +1,110 @@
+"""Page-table indirection primitives for the paged KV cache.
+
+A paged attention cache entry stores K/V (and int8 scales) in a *page pool*
+leaf of shape ``(n_pages, page_size, ...)`` shared by every row of the batch;
+a per-session ``page_table`` of shape ``(B, pages_per_row)`` int32 maps each
+row's logical pages onto physical page ids. Logical position ``p`` of row
+``b`` therefore lives at flat pool slot
+
+    table[b, p // page_size] * page_size + p % page_size
+
+These helpers are the ONLY place that math lives: the model's decode paths
+(`repro.models.model`), the tree-accept copy, and the cache manager
+(`repro.api.cache`) all read and write pool leaves through them, so the
+logical view they expose is bit-identical to the dense ``(B, S, ...)`` layout
+(the dense reference keeps masked softmax semantics; padded logical slots
+beyond a row's ``len`` are never read).
+
+Everything here is pure jnp and jit-compatible; page allocation itself is
+host-side (see ``repro.api.cache.PagedKVCache``) — the jitted step functions
+only ever *index through* an already-populated table.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def page_size_of(pool: jnp.ndarray) -> int:
+    """Static page size of an (unstacked) pool leaf ``(n_pages, ps, ...)``."""
+    return pool.shape[1]
+
+
+def logical_capacity(table: jnp.ndarray, page_size: int) -> int:
+    """Logical sequence capacity per row: pages_per_row * page_size."""
+    return table.shape[1] * page_size
+
+
+def flat_slots(table: jnp.ndarray, page_size: int,
+               pos: jnp.ndarray) -> jnp.ndarray:
+    """Flat pool slot ids for logical positions.
+
+    table: (B, P) int32; pos: (B,) or (B, L) int32 logical positions.
+    Returns int32 of the same shape as ``pos``.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    squeeze = pos.ndim == 1
+    pm = pos[:, None] if squeeze else pos                    # (B, L)
+    page = jnp.take_along_axis(table, pm // page_size, axis=1)
+    slots = page * page_size + pm % page_size
+    return slots[:, 0] if squeeze else slots
+
+
+def view_slots(table: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """(B, P*page_size) flat slot id of every logical position of every row."""
+    B, P = table.shape
+    slots = table[:, :, None] * page_size + jnp.arange(page_size)[None, None, :]
+    return slots.reshape(B, P * page_size)
+
+
+def _flat(pool: jnp.ndarray) -> jnp.ndarray:
+    """(n_pages, ps, ...) -> (n_pages*ps, ...)."""
+    return pool.reshape((pool.shape[0] * pool.shape[1],) + pool.shape[2:])
+
+
+def gather_view(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the logical per-row view of a pool leaf.
+
+    pool: (n_pages, ps, ...); table: (B, P). Returns (B, P*ps, ...) — the
+    exact layout the dense cache reference stores directly, so downstream
+    attention math is unchanged (and bit-identical: masked positions never
+    contribute to the softmax regardless of their gathered contents).
+    """
+    ps = page_size_of(pool)
+    return _flat(pool)[view_slots(table, ps)]
+
+
+def scatter_token(pool: jnp.ndarray, table: jnp.ndarray, pos: jnp.ndarray,
+                  vals: jnp.ndarray) -> jnp.ndarray:
+    """Write one value per row at logical position ``pos``.
+
+    pool: (n_pages, ps, ...); pos: (B,); vals: (B, ...). Distinct live rows
+    hold distinct pages so the scatter is conflict-free (retired rows all
+    alias the trash page, whose contents are never read).
+    """
+    ps = page_size_of(pool)
+    slots = flat_slots(table, ps, pos)                       # (B,)
+    return _flat(pool).at[slots].set(vals.astype(pool.dtype)).reshape(pool.shape)
+
+
+def scatter_slab(pool: jnp.ndarray, table: jnp.ndarray, pos: jnp.ndarray,
+                 vals: jnp.ndarray) -> jnp.ndarray:
+    """Write an (B, L, ...) slab at logical positions ``pos`` (B, L)."""
+    ps = page_size_of(pool)
+    slots = flat_slots(table, ps, pos)                       # (B, L)
+    return _flat(pool).at[slots].set(vals.astype(pool.dtype)).reshape(pool.shape)
+
+
+def gather_positions(pool: jnp.ndarray, table: jnp.ndarray,
+                     pos: jnp.ndarray) -> jnp.ndarray:
+    """Read values at per-row logical positions. pos: (B,) -> (B, ...)."""
+    ps = page_size_of(pool)
+    return _flat(pool)[flat_slots(table, ps, pos)]
+
+
+def paged_shape(dense_shape: Tuple[int, ...], num_pages: int,
+                page_size: int) -> Tuple[int, ...]:
+    """Map a dense cache leaf shape (B, S, ...) to its pool shape
+    (num_pages, page_size, ...)."""
+    return (num_pages, page_size) + tuple(dense_shape[2:])

@@ -27,19 +27,23 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, block_k: int, window: Optional[int], nk: int):
-    b = pl.program_id(0)
-    ki = pl.program_id(2)
-    clen = len_ref[b]
+def _online_softmax_step(ki, clen, k_start, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         block_k: int, window: Optional[int], nk: int):
+    """Shared flash-decoding tile body for the dense and paged kernels.
 
+    The two kernels differ ONLY in how a grid step locates its K/V block
+    (sequential block index vs page-table indirection) — every numerics
+    decision (masking, NEG_INF, online-softmax accumulation, the l == 0
+    guard for fully-masked rows) lives here exactly once. ``k_start`` is the
+    LOGICAL position of the block's first key.
+    """
     @pl.when(ki == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    k_start = ki * block_k
     live = k_start < clen
     if window is not None:
         live = live & (k_start + block_k > clen - window)
@@ -70,6 +74,15 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l = l_scr[...]
         l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int, window: Optional[int], nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    _online_softmax_step(ki, len_ref[b], ki * block_k, q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, scale=scale,
+                         block_k=block_k, window=window, nk=nk)
 
 
 def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
@@ -126,5 +139,94 @@ def decode_attention_fwd(q: jnp.ndarray, k_cache: jnp.ndarray,
         name="specee_decode_attention",
     )
     out = fn(clen, qg, kt, vt)                               # (B,KVH,n_rep,hd)
+    out = out.reshape(B, KVH * n_rep, hd)
+    return out[:, None].reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# page-table-aware variant (paged KV cache — repro.api.cache.PagedKVCache)
+# ---------------------------------------------------------------------------
+def _paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                  window: Optional[int], npg: int):
+    # identical tile math to the dense kernel; the page-table indirection
+    # happens in the K/V BlockSpec index maps, so k_start here is the
+    # LOGICAL position of page pi (pi * page_size), not the physical one
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    _online_softmax_step(pi, len_ref[b], pi * page_size, q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, scale=scale,
+                         block_k=page_size, window=window, nk=npg)
+
+
+def paged_decode_attention_fwd(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                               cache_len,
+                               window: Optional[int] = None) -> jnp.ndarray:
+    """Split-KV decode attention reading K/V through a page table.
+
+    q: (B, 1, H, hd); k_pool/v_pool: (n_pages, page_size, KVH, hd) — the
+    shared physical pool; page_table: (B, P) int32 logical→physical page map;
+    cache_len: scalar or (B,) valid logical length per row.
+
+    The page table is scalar-prefetched and consumed by the K/V BlockSpec
+    index maps, so each grid step DMAs exactly one physical page — the
+    (B, S, ...) logical view is never materialized. Pages past a row's valid
+    prefix skip both compute (`pl.when`) AND traffic: their index map clamps
+    to the last live page, and Pallas elides the DMA when the block index is
+    unchanged between grid steps — this is what makes per-row compaction
+    (freed pages, zeroed length) a real HBM-bytes win, not just masked
+    compute.
+    """
+    n_pages, ps, KVH, hd = k_pool.shape
+    B, _, H, _ = q.shape
+    n_rep = H // KVH
+    P = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    tbl = jnp.asarray(page_table, jnp.int32)
+    qg = q[:, 0].reshape(B, KVH, n_rep, hd)
+    kt = jnp.moveaxis(k_pool, 2, 1)                          # (NP,KVH,ps,hd)
+    vt = jnp.moveaxis(v_pool, 2, 1)
+
+    from repro.kernels import interpret_default, tpu_compiler_params
+    kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
+                               window=window, npg=P)
+
+    def kv_page(b, g, pi, lens, tbl):
+        # pages beyond the valid prefix are dead (pl.when masks compute);
+        # clamp them to the last live page so consecutive grid steps keep
+        # the same block index and Pallas elides the DMA entirely
+        last_live = jnp.maximum((lens[b] + ps - 1) // ps - 1, 0)
+        return (tbl[b, jnp.minimum(pi, last_live)], g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, hd),
+                         lambda b, g, pi, lens, tbl: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd), kv_page),
+            pl.BlockSpec((1, 1, ps, hd), kv_page),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_rep, hd),
+                               lambda b, g, pi, lens, tbl: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((n_rep, 1), jnp.float32),
+            pltpu.VMEM((n_rep, hd), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, n_rep, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret_default(),
+        name="specee_paged_decode_attention",
+    )
+    out = fn(clen, tbl, qg, kt, vt)
     out = out.reshape(B, KVH * n_rep, hd)
     return out[:, None].reshape(B, 1, H, hd)

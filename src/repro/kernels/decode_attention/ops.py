@@ -7,7 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import decode_attention_fwd
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_fwd, paged_decode_attention_fwd)
 
 
 @partial(jax.jit, static_argnames=("window", "block_k"))
@@ -23,3 +24,20 @@ def decode_attention(cfg, q, k_cache, v_cache, cache_len,
                      window: Optional[int] = None) -> jnp.ndarray:
     """Model-layer adapter (matches ``attention.attend_decode`` signature)."""
     return decode_attention_raw(q, k_cache, v_cache, cache_len, window=window)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_decode_attention_raw(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                               cache_len,
+                               window: Optional[int] = None) -> jnp.ndarray:
+    return paged_decode_attention_fwd(q, k_pool, v_pool, page_table,
+                                      cache_len, window=window)
+
+
+def paged_decode_attention(cfg, q, k_pool, v_pool, page_table, cache_len,
+                           window: Optional[int] = None) -> jnp.ndarray:
+    """Model-layer adapter: page-table-aware gather variant consumed by the
+    paged decode path (``model._block_step`` under ``flags.decode_kernel``)."""
+    return paged_decode_attention_raw(q, k_pool, v_pool, page_table,
+                                      cache_len, window=window)

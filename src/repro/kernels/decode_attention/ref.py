@@ -30,3 +30,16 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v_cache.dtype), v_cache)
+
+
+def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                               cache_len,
+                               window: Optional[int] = None) -> jnp.ndarray:
+    """Oracle for the paged kernel: gather the logical view, then run the
+    dense reference. k_pool/v_pool: (n_pages, ps, KVH, hd);
+    page_table: (B, P) int32."""
+    from repro.core import paged as paged_lib
+    k_cache = paged_lib.gather_view(k_pool, page_table)
+    v_cache = paged_lib.gather_view(v_pool, page_table)
+    return decode_attention_ref(q, k_cache, v_cache, cache_len, window=window)

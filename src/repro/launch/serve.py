@@ -34,6 +34,17 @@ def main() -> None:
                     help="alias for --mode dense (back-compat)")
     ap.add_argument("--no-fused-gate", action="store_true",
                     help="pin the reference (unfused) exit-gate path")
+    ap.add_argument("--cache", default="paged", choices=["paged", "dense"],
+                    help="KV cache layout (paged pools vs the dense "
+                         "slot-masked reference)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged-KV page size (default: ServeConfig.page_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="Sarathi-style chunked-prefill budget per tick "
+                         "(0 = blocking admission; default: "
+                         "ServeConfig.prefill_chunk)")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI smoke: few short requests + completion asserts")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for --mode dense "
                          "(0 = greedy)")
@@ -43,6 +54,9 @@ def main() -> None:
                     help="train draft+predictors first (slower start)")
     args = ap.parse_args()
     mode = "dense" if args.no_specee else args.mode
+    if args.ci:
+        args.requests = min(args.requests, 4)
+        args.max_new = min(args.max_new, 6)
 
     from repro.configs import get_config
     from repro.core import engine as eng
@@ -69,7 +83,9 @@ def main() -> None:
         strategy = DenseStrategy(temperature=args.temperature)
     engine = ServingEngine(model, params, sw, strategy=strategy,
                            prng_seed=args.seed,
-                           fused_gate=not args.no_fused_gate)
+                           fused_gate=not args.no_fused_gate,
+                           cache=args.cache, page_size=args.page_size,
+                           prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(rng.integers(0, run.model.vocab_size,
@@ -79,9 +95,21 @@ def main() -> None:
     done = engine.run_to_completion()
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
+    mgr = engine.session.cache_mgr
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, mode={mode}, "
+          f"({toks/dt:.1f} tok/s, mode={mode}, cache={mgr.kind}, "
+          f"chunk={engine.scheduler.chunk_tokens}, "
           f"fused_gate={not args.no_fused_gate})")
+    if args.ci:
+        assert len(done) == args.requests, \
+            f"CI smoke: {len(done)}/{args.requests} requests completed"
+        assert all(r.done and len(r.output) == args.max_new for r in done), \
+            "CI smoke: a request missed its token budget"
+        if mgr.kind == "paged":
+            assert mgr.free_pages == mgr.num_pages, \
+                f"CI smoke: page leak ({mgr.free_pages}/{mgr.num_pages} free)"
+        print("[serve] CI smoke OK (paged-cache scheduler path exercised)"
+              if mgr.kind == "paged" else "[serve] CI smoke OK")
     for r in done:
         line = (f"  req {r.uid}: {len(r.output)} tokens "
                 f"exits={sum(1 for e in r.exit_points if e < model.num_exit_points)}")

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.config import (ATTN, LOCAL_ATTN, RGLRU, SSD, ModelConfig, RunConfig,
                           SSMConfig)
+from repro.core import paged as paged_lib
 from repro.models import attention as attn_lib
 from repro.models import common, frontends, moe as moe_lib, rglru as rglru_lib
 from repro.models import ssd as ssd_lib
@@ -159,6 +160,23 @@ def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
             ).astype(dtype)
 
 
+def _entry_write_token(cache_entry: Any, vals: Dict[str, jnp.ndarray],
+                       pages: Optional[jnp.ndarray], rows: jnp.ndarray,
+                       pvec: jnp.ndarray) -> Any:
+    """Write one token's projections into an attention cache entry.
+
+    vals: {"k": ..., "v": ...} (+"ks"/"vs" under kv_quant), each (B, ...).
+    The ONE place the dense row-scatter vs paged table-scatter choice is
+    made for single-token writes — decode step and skipped-layer propagation
+    share it, so the two paths cannot drift."""
+    if pages is None:
+        return {name: cache_entry[name].at[rows, pvec].set(
+                    v.astype(cache_entry[name].dtype))
+                for name, v in vals.items()}
+    return {name: paged_lib.scatter_token(cache_entry[name], pages, pvec, v)
+            for name, v in vals.items()}
+
+
 def _wsc(x: jnp.ndarray, flags: "ModelFlags") -> jnp.ndarray:
     """Pin the batch dim of an activation to the data axes (and, under
     ``act_seq_shard``, the sequence dim to 'model'); leave every other dim to
@@ -246,14 +264,21 @@ def _block_seq(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
 # ----- single-token decode path ---------------------------------------------
 def _block_step(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
                 cache_entry: Any, pos: jnp.ndarray, flags: ModelFlags,
-                live_mask: Optional[jnp.ndarray] = None
+                live_mask: Optional[jnp.ndarray] = None,
+                pages: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Any]:
     """h: (B, D) one token; cache_entry: this block's slice of the cache.
     pos: scalar int32 — index of the current token. Returns (h_out, new_entry).
 
     live_mask: (B,) bool — SpecEE: rows that have exited keep their recurrent
     state stale (attention K/V writes are propagation-consistent because the
-    input hidden state of exited rows is frozen at the exit value)."""
+    input hidden state of exited rows is frozen at the exit value).
+
+    pages: (B, P) int32 page table or None. When set, attention cache leaves
+    are page pools ``(n_pages, page_size, ...)`` and every read/write goes
+    through the table (``repro.core.paged``); the gathered logical view keeps
+    the math bit-identical to the dense layout. Recurrent/SSD entries are
+    never paged."""
     B, D = h.shape
     if kind in (ATTN, LOCAL_ATTN):
         x = common.apply_norm(cfg, p["ln1"], h)[:, None, :]       # (B,1,D)
@@ -261,24 +286,39 @@ def _block_step(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
         positions = pvec[:, None]
         rows = jnp.arange(B)
         q, k, v = attn_lib.qkv(cfg, p["attn"], x, positions)
-        new_entry = {}
         if flags.kv_quant:
             kq, ks = _kv_quantize(k[:, 0])
             vq, vs = _kv_quantize(v[:, 0])
-            new_entry = {
-                "k": cache_entry["k"].at[rows, pvec].set(kq),
-                "v": cache_entry["v"].at[rows, pvec].set(vq),
-                "ks": cache_entry["ks"].at[rows, pvec].set(ks),
-                "vs": cache_entry["vs"].at[rows, pvec].set(vs)}
-            k_cache = _kv_dequantize(new_entry["k"], new_entry["ks"], h.dtype)
-            v_cache = _kv_dequantize(new_entry["v"], new_entry["vs"], h.dtype)
+            new_entry = _entry_write_token(
+                cache_entry, {"k": kq, "v": vq, "ks": ks, "vs": vs},
+                pages, rows, pvec)
         else:
-            k_cache = cache_entry["k"].at[rows, pvec].set(
-                k[:, 0].astype(cache_entry["k"].dtype))
-            v_cache = cache_entry["v"].at[rows, pvec].set(
-                v[:, 0].astype(cache_entry["v"].dtype))
-            new_entry = {"k": k_cache, "v": v_cache}
-        if flags.decode_kernel:
+            new_entry = _entry_write_token(
+                cache_entry, {"k": k[:, 0], "v": v[:, 0]}, pages, rows, pvec)
+        if pages is None:
+            k_view, v_view = new_entry["k"], new_entry["v"]
+            ks_view = new_entry.get("ks")
+            vs_view = new_entry.get("vs")
+        else:
+            k_view = paged_lib.gather_view(new_entry["k"], pages)
+            v_view = paged_lib.gather_view(new_entry["v"], pages)
+            ks_view = (paged_lib.gather_view(new_entry["ks"], pages)
+                       if flags.kv_quant else None)
+            vs_view = (paged_lib.gather_view(new_entry["vs"], pages)
+                       if flags.kv_quant else None)
+        if flags.kv_quant:
+            k_cache = _kv_dequantize(k_view, ks_view, h.dtype)
+            v_cache = _kv_dequantize(v_view, vs_view, h.dtype)
+        else:
+            k_cache, v_cache = k_view, v_view
+        if flags.decode_kernel and pages is not None and not flags.kv_quant:
+            # page-table-aware split-KV kernel: reads pages straight from the
+            # pool, never materializing the (B, S, ...) logical view
+            from repro.kernels.decode_attention import ops as da_ops
+            o = da_ops.paged_decode_attention(
+                cfg, q, new_entry["k"], new_entry["v"], pages, pvec + 1,
+                window=_window(cfg, kind))
+        elif flags.decode_kernel:
             from repro.kernels.decode_attention import ops as da_ops
             o = da_ops.decode_attention(cfg, q, k_cache, v_cache, pvec + 1,
                                         window=_window(cfg, kind))
@@ -314,7 +354,8 @@ def _block_step(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
 
 def _block_propagate(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
                      cache_entry: Any, pos: jnp.ndarray,
-                     flags: ModelFlags = ModelFlags()) -> Any:
+                     flags: ModelFlags = ModelFlags(),
+                     pages: Optional[jnp.ndarray] = None) -> Any:
     """SpecEE skipped-layer state maintenance (DESIGN.md §3).
 
     Attention: KV propagation — write K/V projections of the *exit* hidden
@@ -331,15 +372,10 @@ def _block_propagate(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
         if flags.kv_quant:
             kq, ks = _kv_quantize(k[:, 0])
             vq, vs = _kv_quantize(v[:, 0])
-            return {"k": cache_entry["k"].at[rows, pvec].set(kq),
-                    "v": cache_entry["v"].at[rows, pvec].set(vq),
-                    "ks": cache_entry["ks"].at[rows, pvec].set(ks),
-                    "vs": cache_entry["vs"].at[rows, pvec].set(vs)}
-        k_cache = cache_entry["k"].at[rows, pvec].set(
-            k[:, 0].astype(cache_entry["k"].dtype))
-        v_cache = cache_entry["v"].at[rows, pvec].set(
-            v[:, 0].astype(cache_entry["v"].dtype))
-        return {"k": k_cache, "v": v_cache}
+            vals = {"k": kq, "v": vq, "ks": ks, "vs": vs}
+        else:
+            vals = {"k": k[:, 0], "v": v[:, 0]}
+        return _entry_write_token(cache_entry, vals, pages, rows, pvec)
     if kind == RGLRU:
         x = common.apply_norm(cfg, p["ln1"], h)
         xb = common.apply_linear(p["rec"]["wx"], x)
@@ -356,26 +392,83 @@ def _block_propagate(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
     raise ValueError(kind)
 
 
+# ----- chunked-prefill extension step ---------------------------------------
+def _block_extend(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
+                  cache_entry: Any, pos0: jnp.ndarray,
+                  positions: jnp.ndarray, flags: ModelFlags
+                  ) -> Tuple[jnp.ndarray, Any]:
+    """Process a C-token prompt chunk against a dense decode cache.
+
+    h: (B, C, D); pos0: (B,) prefix length; positions: (B, C) absolute
+    positions of the chunk. Chunk K/V is written (quantized under
+    ``kv_quant``) before attending, so intra-chunk causal attention sees its
+    own keys exactly like the decode step does. Attention-family blocks only
+    (DESIGN.md §4 — chunked prefill needs an order-free state extension,
+    which recurrent/SSD blocks don't expose)."""
+    assert kind in (ATTN, LOCAL_ATTN)
+    B, C, D = h.shape
+    x = common.apply_norm(cfg, p["ln1"], h)
+    q, k, v = attn_lib.qkv(cfg, p["attn"], x, positions)
+    rows = jnp.arange(B)[:, None]
+    if flags.kv_quant:
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        new_entry = {
+            "k": cache_entry["k"].at[rows, positions].set(kq, mode="drop"),
+            "v": cache_entry["v"].at[rows, positions].set(vq, mode="drop"),
+            "ks": cache_entry["ks"].at[rows, positions].set(ks, mode="drop"),
+            "vs": cache_entry["vs"].at[rows, positions].set(vs, mode="drop")}
+        k_cache = _kv_dequantize(new_entry["k"], new_entry["ks"], h.dtype)
+        v_cache = _kv_dequantize(new_entry["v"], new_entry["vs"], h.dtype)
+    else:
+        k_cache = cache_entry["k"].at[rows, positions].set(
+            k.astype(cache_entry["k"].dtype), mode="drop")
+        v_cache = cache_entry["v"].at[rows, positions].set(
+            v.astype(cache_entry["v"].dtype), mode="drop")
+        new_entry = {"k": k_cache, "v": v_cache}
+    o = attn_lib.attend_extend(cfg, q, k_cache, v_cache, pos0,
+                               window=_window(cfg, kind))
+    h = h + attn_lib.out_proj(p["attn"], o)
+    x2 = common.apply_norm(cfg, p["ln2"], h)
+    f, _ = _ffn(cfg, p, x2, flags)
+    h = h + f
+    return h, new_entry
+
+
 # ----- tree-verification step (T3 speculative decoding) ---------------------
 def _block_step_tree(cfg: ModelConfig, p: Params, h: jnp.ndarray,
                      cache_entry: Any, mask: jnp.ndarray,
                      positions: jnp.ndarray, scratch_off: int,
-                     flags: ModelFlags) -> Tuple[jnp.ndarray, Any]:
+                     flags: ModelFlags,
+                     pages: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, Any]:
     """Process N tree tokens at once against a cache with N scratch slots.
 
     h: (B, N, D); mask: (1|B, 1, N, S+N) boolean (context + ancestor);
     positions: (B, N) absolute positions; scratch_off: static int — tree K/V
-    land at cache slots [scratch_off, scratch_off+N).
+    land at LOGICAL cache slots [scratch_off, scratch_off+N) (page-table
+    indirected when ``pages`` is set).
     Attention-family blocks only (DESIGN.md §4: T3 is restricted to
     transformer archs; SSM/hybrid use the AR engine).
     """
     B, N, D = h.shape
     x = common.apply_norm(cfg, p["ln1"], h)
     q, k, v = attn_lib.qkv(cfg, p["attn"], x, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache_entry["k"], k.astype(cache_entry["k"].dtype), scratch_off, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache_entry["v"], v.astype(cache_entry["v"].dtype), scratch_off, axis=1)
+    if pages is None:
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_entry["k"], k.astype(cache_entry["k"].dtype), scratch_off,
+            axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_entry["v"], v.astype(cache_entry["v"].dtype), scratch_off,
+            axis=1)
+        k_cache, v_cache = new_k, new_v
+    else:
+        scratch_pos = jnp.broadcast_to(
+            scratch_off + jnp.arange(N, dtype=jnp.int32)[None, :], (B, N))
+        new_k = paged_lib.scatter_slab(cache_entry["k"], pages, scratch_pos, k)
+        new_v = paged_lib.scatter_slab(cache_entry["v"], pages, scratch_pos, v)
+        k_cache = paged_lib.gather_view(new_k, pages)
+        v_cache = paged_lib.gather_view(new_v, pages)
     n_rep = cfg.num_heads // cfg.num_kv_heads
     kk = attn_lib._repeat_kv(k_cache, n_rep)
     vv = attn_lib._repeat_kv(v_cache, n_rep)
@@ -384,7 +477,7 @@ def _block_step_tree(cfg: ModelConfig, p: Params, h: jnp.ndarray,
     x2 = common.apply_norm(cfg, p["ln2"], h)
     f, _ = _ffn(cfg, p, x2, flags)
     h = h + f
-    return h, {"k": k_cache, "v": v_cache}
+    return h, {"k": new_k, "v": new_v}
 
 
 # ---------------------------------------------------------------------------
@@ -668,13 +761,63 @@ class Model:
             segs.append(entry)
         return {"segments": segs, "len": jnp.zeros((batch,), jnp.int32)}
 
+    # ----- chunked prefill (Sarathi-style admission) -----
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill needs blocks whose state extension is expressible
+        as "write K/V, attend prefix" — attention-family only (DESIGN.md §4).
+        Recurrent/SSD and frontend archs admit with one whole-prompt chunk.
+        """
+        return (self.cfg.is_decoder() and self.cfg.frontend == "none" and
+                all(k in (ATTN, LOCAL_ATTN)
+                    for unit, _ in self.segments for k in unit))
+
+    def prefill_extend(self, params: Params, tokens: jnp.ndarray, cache: Any,
+                       n_valid) -> Tuple[jnp.ndarray, Any]:
+        """Extend a DENSE decode cache with one prompt chunk.
+
+        tokens: (B, C) int32, first ``n_valid`` real (the tail is padding
+        whose K/V lands past the prompt and is later overwritten or masked —
+        intra-chunk causality already hides it from real queries).
+        Returns (h (B, C, D) pre-final-norm hiddens, cache with
+        ``len += n_valid``). The admission path of ``DecodeSession.
+        prefill_chunk`` jits exactly this."""
+        assert self.supports_chunked_prefill(), \
+            f"{self.cfg.name}: chunked prefill requires a pure-attention " \
+            "decoder stack (DESIGN.md §4)"
+        h = self.embed(params, tokens)                       # (B, C, D)
+        pos0 = cache["len"]
+        B, C = tokens.shape
+        positions = pos0[:, None] + jnp.arange(C)[None, :]
+        new_segs = []
+        for seg in range(len(self.segments)):
+            def body(carry, xs):
+                hc = carry
+                unit_params, entry = xs
+                new_entry = {}
+                for i, kind in enumerate(self.segments[seg][0]):
+                    hc, ne = _block_extend(self.cfg, kind,
+                                           unit_params[f"u{i}"], hc,
+                                           entry[f"u{i}"], pos0, positions,
+                                           self.flags)
+                    new_entry[f"u{i}"] = jax.tree_util.tree_map(
+                        lambda n, o: n.astype(o.dtype), ne, entry[f"u{i}"])
+                return _wsc(hc, self.flags), new_entry
+
+            h, new_seg_cache = jax.lax.scan(
+                body, h, (params["segments"][seg], cache["segments"][seg]))
+            new_segs.append(new_seg_cache)
+        return h, dict(cache, segments=new_segs,
+                       len=pos0 + jnp.asarray(n_valid, jnp.int32))
+
     # ----- layer-granular decode API (SpecEE engine) -----
     def run_unit(self, params: Params, seg: int, unit_idx: jnp.ndarray,
                  h: jnp.ndarray, seg_cache: Any, pos: jnp.ndarray,
-                 live_mask: Optional[jnp.ndarray] = None
+                 live_mask: Optional[jnp.ndarray] = None,
+                 pages: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, Any]:
         """Run unit ``unit_idx`` (dynamic) of segment ``seg`` (static) on one
         token. h: (B, D). seg_cache: the stacked cache of this segment.
+        ``pages``: the session page table when the cache is paged.
         Returns (h_out, updated seg_cache)."""
         unit, reps = self.segments[seg]
         up = jax.tree_util.tree_map(
@@ -686,7 +829,7 @@ class Model:
         new_entries = {}
         for i, kind in enumerate(unit):
             h, ne = _block_step(self.cfg, kind, up[f"u{i}"], h, ce[f"u{i}"],
-                                pos, self.flags, live_mask)
+                                pos, self.flags, live_mask, pages=pages)
             new_entries[f"u{i}"] = ne
         seg_cache = jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -695,7 +838,8 @@ class Model:
         return _wsc(h, self.flags), seg_cache
 
     def propagate_unit(self, params: Params, seg: int, unit_idx: jnp.ndarray,
-                       h: jnp.ndarray, seg_cache: Any, pos: jnp.ndarray) -> Any:
+                       h: jnp.ndarray, seg_cache: Any, pos: jnp.ndarray,
+                       pages: Optional[jnp.ndarray] = None) -> Any:
         """KV/state propagation for a skipped unit (SpecEE early exit)."""
         unit, reps = self.segments[seg]
         up = jax.tree_util.tree_map(
@@ -707,7 +851,8 @@ class Model:
         new_entries = {}
         for i, kind in enumerate(unit):
             new_entries[f"u{i}"] = _block_propagate(
-                self.cfg, kind, up[f"u{i}"], h, ce[f"u{i}"], pos, self.flags)
+                self.cfg, kind, up[f"u{i}"], h, ce[f"u{i}"], pos, self.flags,
+                pages=pages)
         return jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
                 full, new.astype(full.dtype), unit_idx, 0),
@@ -719,7 +864,8 @@ class Model:
 
     def run_unit_tree(self, params: Params, seg: int, unit_idx: jnp.ndarray,
                       h: jnp.ndarray, seg_cache: Any, mask: jnp.ndarray,
-                      positions: jnp.ndarray, scratch_off: int
+                      positions: jnp.ndarray, scratch_off: int,
+                      pages: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, Any]:
         """Tree analogue of ``run_unit``: h is (B, N, D) tree-node hiddens."""
         unit, reps = self.segments[seg]
@@ -733,7 +879,8 @@ class Model:
         for i, kind in enumerate(unit):
             assert kind == ATTN, "tree mode requires pure-attention stacks"
             h, ne = _block_step_tree(self.cfg, up[f"u{i}"], h, ce[f"u{i}"],
-                                     mask, positions, scratch_off, self.flags)
+                                     mask, positions, scratch_off, self.flags,
+                                     pages=pages)
             new_entries[f"u{i}"] = ne
         seg_cache = jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -744,7 +891,8 @@ class Model:
     def propagate_unit_tree(self, params: Params, seg: int,
                             unit_idx: jnp.ndarray, h: jnp.ndarray,
                             seg_cache: Any, positions: jnp.ndarray,
-                            scratch_off: int) -> Any:
+                            scratch_off: int,
+                            pages: Optional[jnp.ndarray] = None) -> Any:
         """KV propagation for tree scratch slots of a skipped unit."""
         unit, reps = self.segments[seg]
         up = jax.tree_util.tree_map(
@@ -753,18 +901,29 @@ class Model:
         ce = jax.tree_util.tree_map(
             lambda x: jax.lax.dynamic_index_in_dim(x, unit_idx, 0, False),
             seg_cache)
+        N = h.shape[1]
+        scratch_pos = scratch_off + jnp.arange(N, dtype=jnp.int32)[None, :]
         new_entries = {}
         for i, kind in enumerate(unit):
             p = up[f"u{i}"]
             x = common.apply_norm(self.cfg, p["ln1"], h)
             k, v = attn_lib.kv_only(self.cfg, p["attn"], x, positions)
             entry = ce[f"u{i}"]
-            new_entries[f"u{i}"] = {
-                "k": jax.lax.dynamic_update_slice_in_dim(
-                    entry["k"], k.astype(entry["k"].dtype), scratch_off, axis=1),
-                "v": jax.lax.dynamic_update_slice_in_dim(
-                    entry["v"], v.astype(entry["v"].dtype), scratch_off, axis=1),
-            }
+            if pages is None:
+                new_entries[f"u{i}"] = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        entry["k"], k.astype(entry["k"].dtype), scratch_off,
+                        axis=1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        entry["v"], v.astype(entry["v"].dtype), scratch_off,
+                        axis=1),
+                }
+            else:
+                pos_mat = jnp.broadcast_to(scratch_pos, (h.shape[0], N))
+                new_entries[f"u{i}"] = {
+                    "k": paged_lib.scatter_slab(entry["k"], pages, pos_mat, k),
+                    "v": paged_lib.scatter_slab(entry["v"], pages, pos_mat, v),
+                }
         return jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
                 full, new.astype(full.dtype), unit_idx, 0),
@@ -775,26 +934,45 @@ class Model:
                        scratch_off: int) -> Any:
         """Copy the K/V of accepted tree nodes from scratch slots into their
         real positions. accepted_nodes: (B, Dmax) node ids (-1 pad);
-        accepted_len: (B,); node at chain index d lands at pos0+d."""
+        accepted_len: (B,); node at chain index d lands at pos0+d. Paged
+        caches (``cache["page_table"]``) route the copy through the table."""
         B, Dmax = accepted_nodes.shape
         rows = jnp.arange(B)
+        pages = cache.get("page_table")
+
+        def copy_leaf(x):
+            # dense: x (reps, B, S+N, kvh, hd)
+            for d in range(Dmax):
+                node = accepted_nodes[:, d]
+                valid = (d < accepted_len) & (node >= 0)
+                src = x[:, rows, scratch_off + jnp.maximum(node, 0)]
+                dst = x[:, rows, pos0 + d]
+                x = x.at[:, rows, pos0 + d].set(
+                    jnp.where(valid[None, :, None, None], src, dst))
+            return x
+
+        def copy_leaf_paged(x):
+            # paged: x (reps, n_pages, ps, kvh, hd) — per-row logical slots
+            # resolve through the page table
+            ps = x.shape[2]
+            xf = x.reshape((x.shape[0], x.shape[1] * ps) + x.shape[3:])
+            for d in range(Dmax):
+                node = accepted_nodes[:, d]
+                valid = (d < accepted_len) & (node >= 0)
+                src_slot = paged_lib.flat_slots(
+                    pages, ps, scratch_off + jnp.maximum(node, 0))
+                dst_slot = paged_lib.flat_slots(pages, ps, pos0 + d)
+                src = xf[:, src_slot]                       # (reps, B, ...)
+                dst = xf[:, dst_slot]
+                vb = valid.reshape((1, B) + (1,) * (src.ndim - 2))
+                xf = xf.at[:, dst_slot].set(jnp.where(vb, src, dst))
+            return xf.reshape(x.shape)
+
         new_segs = []
         for seg, (unit, reps) in enumerate(self.segments):
-            seg_cache = cache["segments"][seg]
-
-            def copy_leaf(x):
-                # x: (reps, B, S+N, kvh, hd)
-                for d in range(Dmax):
-                    node = accepted_nodes[:, d]
-                    valid = (d < accepted_len) & (node >= 0)
-                    src = x[:, rows, scratch_off + jnp.maximum(node, 0)]
-                    dst = x[:, rows, pos0 + d]
-                    x = x.at[:, rows, pos0 + d].set(
-                        jnp.where(valid[None, :, None, None], src, dst))
-                return x
-
-            new_segs.append(jax.tree_util.tree_map(copy_leaf, seg_cache))
-        return {"segments": new_segs, "len": cache["len"]}
+            fn = copy_leaf if pages is None else copy_leaf_paged
+            new_segs.append(jax.tree_util.tree_map(fn, cache["segments"][seg]))
+        return dict(cache, segments=new_segs)
 
     # ----- dense decode (baseline, no early exit) -----
     def decode_step(self, params: Params, token: jnp.ndarray, cache: Any
@@ -812,6 +990,7 @@ class Model:
         token: (B,) int32. Returns (h (B, D), new cache)."""
         h = self.embed(params, token[:, None])[:, 0, :]          # (B, D)
         pos = cache["len"]
+        pages = cache.get("page_table")
         new_segs = []
         for seg in range(len(self.segments)):
             seg_cache = cache["segments"][seg]
@@ -824,7 +1003,8 @@ class Model:
                 hc = h_c
                 for i, kind in enumerate(self.segments[seg][0]):
                     hc, ne = _block_step(self.cfg, kind, unit_params[f"u{i}"],
-                                         hc, entry[f"u{i}"], pos, self.flags)
+                                         hc, entry[f"u{i}"], pos, self.flags,
+                                         pages=pages)
                     new_entry[f"u{i}"] = jax.tree_util.tree_map(
                         lambda n, o: n.astype(o.dtype), ne, entry[f"u{i}"])
                 return _wsc(hc, self.flags), new_entry
@@ -844,7 +1024,7 @@ class Model:
                 h, new_seg_cache = jax.lax.scan(
                     body, h, (params["segments"][seg], seg_cache))
             new_segs.append(new_seg_cache)
-        return h, {"segments": new_segs, "len": pos + 1}
+        return h, dict(cache, segments=new_segs, len=pos + 1)
 
 
 def build_model(run: RunConfig, flags: ModelFlags = ModelFlags()) -> Model:

@@ -1,18 +1,28 @@
-"""Continuous-batching serving engine — a thin slot loop over ``DecodeSession``.
+"""Continuous-batching serving engine — a slot loop over ``DecodeSession``
+with managed cache memory and scheduled admission.
 
 vLLM-style slot model adapted to JAX's static shapes:
-  * ``max_batch`` slots share one batched ``DecodeSession``;
-  * arriving requests are prefilled individually (batch-1 prefill — the
-    expensive, variable-length op) and *inserted* into a free row
-    (``session.prefill_row``); per-row cache lengths make ragged prompts
-    first-class;
+  * ``max_batch`` slots share one batched ``DecodeSession`` whose memory is
+    owned by a ``KVCacheManager`` (``repro.api.cache``): **paged KV** by
+    default (``ServeConfig.page_size`` pages + per-row page tables, free-page
+    admission control), with the slot-masked dense layout available as the
+    bit-identical reference (``cache="dense"``);
+  * admission runs through the ``ChunkedPrefillScheduler``
+    (``repro.api.scheduler``): prompts split into ``ServeConfig.
+    prefill_chunk``-token chunks interleaved with decode ticks
+    (Sarathi-style) — a live batch is never stalled more than one chunk
+    budget per tick. ``prefill_chunk=0`` restores blocking whole-prompt
+    admission;
   * every engine tick runs ONE batched strategy step for all live slots —
     dense, AR-SpecEE, or tree speculative decoding behind the same
-    ``StepResult`` surface (tree serving emits up to depth+1 tokens per
-    tick); finished rows (EOS / max_new, tracked by the session) retire and
-    free their slot — exactly the iteration-level scheduling of Orca/vLLM;
+    ``StepResult`` surface; finished rows retire *and compact*
+    (``session.retire_row``): their pages return to the pool and their
+    logical length drops to zero, so long-idle slots stop paying attention
+    span — exactly the iteration-level scheduling of Orca/vLLM;
   * inactive slots are masked; their compute is wasted but bounded (the
-    standard TPU static-batch trade-off; see DESIGN.md §3).
+    standard TPU static-batch trade-off; see DESIGN.md §3), and after
+    compaction an idle slot's attention span is ~zero rather than its stale
+    context length.
 
 Serve-path adoption (ROADMAP): the engine defaults the fused exit-gate
 pipeline ON (``ModelFlags.exit_gate_kernel``) — pass ``fused_gate=False`` to
@@ -28,11 +38,14 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional, Union
+from typing import Dict, List, Optional, Union
 
+import jax
 import numpy as np
 
-from repro.api import DecodeStrategy, DenseStrategy, Engine, get_strategy
+from repro.api import (CacheSpec, DecodeStrategy, DenseStrategy, Engine,
+                       get_strategy)
+from repro.api.scheduler import ChunkedPrefillScheduler
 from repro.models.model import Model, build_model
 
 
@@ -52,10 +65,32 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, sw=None, specee: bool = True,
                  strategy: Union[str, DecodeStrategy, None] = None,
-                 prng_seed: int = 0, fused_gate: bool = True):
-        if bool(fused_gate) != getattr(model.flags, "exit_gate_kernel", False):
-            model = build_model(model.run, dataclasses.replace(
-                model.flags, exit_gate_kernel=bool(fused_gate)))
+                 prng_seed: int = 0, fused_gate: bool = True,
+                 cache: Union[None, str, CacheSpec] = "paged",
+                 page_size: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
+        spec = CacheSpec.resolve(cache, model.run.serve)
+        if page_size is not None:
+            # the override obeys the same rule ServeConfig validates at
+            # construction (pages tile the cache exactly)
+            if page_size <= 0 or model.run.serve.max_seq_len % page_size:
+                raise ValueError(
+                    f"page_size ({page_size}) must be > 0 and divide "
+                    f"max_seq_len ({model.run.serve.max_seq_len})")
+            spec = dataclasses.replace(spec, page_size=page_size)
+        self.cache_spec = spec
+        flags = model.flags
+        if bool(fused_gate) != getattr(flags, "exit_gate_kernel", False):
+            flags = dataclasses.replace(flags,
+                                        exit_gate_kernel=bool(fused_gate))
+        # paged serving pairs with the page-table-aware decode kernel on real
+        # hardware; off-TPU the kernel would run in interpret mode, so the
+        # XLA gather path stays (same tokens — the kernel is a perf variant)
+        if (spec.kind == "paged" and not flags.decode_kernel
+                and jax.default_backend() == "tpu"):
+            flags = dataclasses.replace(flags, decode_kernel=True)
+        if flags is not model.flags:
+            model = build_model(model.run, flags)
         self.model = model
         self.serve_cfg = model.run.serve
         if strategy is None:
@@ -73,9 +108,14 @@ class ServingEngine:
         S = self.serve_cfg.max_seq_len
         self.B, self.S = B, S
         self.session = self.engine.new_session(batch=B, max_seq=S,
-                                               prng_seed=prng_seed)
+                                               prng_seed=prng_seed,
+                                               cache=self.cache_spec)
+        chunk = (self.serve_cfg.prefill_chunk if prefill_chunk is None
+                 else prefill_chunk)
+        self.scheduler = ChunkedPrefillScheduler(
+            self.session, chunk_tokens=chunk or None)
         self.slots: List[Optional[Request]] = [None] * B
-        self.pending: List[Request] = []
+        self._inflight: Dict[int, Request] = {}
         self._uid = itertools.count()
 
     # ----- request intake -----
@@ -83,35 +123,43 @@ class ServingEngine:
                eos_token: Optional[int] = None) -> Request:
         req = Request(uid=next(self._uid), prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, eos_token=eos_token)
-        self.pending.append(req)
+        self._inflight[req.uid] = req
+        self.scheduler.submit(req.uid, req.prompt,
+                              max_new_tokens=req.max_new_tokens,
+                              eos_token=req.eos_token)
         return req
 
-    # ----- admission: batch-1 prefill, insert into slot -----
-    def _admit(self) -> List[Request]:
-        """Fill free slots from the pending queue; retires requests whose
-        prefill already finished them (max_new == 1 or first token == EOS)."""
-        finished: List[Request] = []
-        for slot in range(self.B):
-            if self.slots[slot] is not None or not self.pending:
-                continue
-            req = self.pending.pop(0)
-            first = self.session.prefill_row(
-                slot, req.prompt, max_new_tokens=req.max_new_tokens,
-                eos_token=req.eos_token)
-            if req.max_new_tokens > 0:
-                req.output.append(first)
-            if self.session.row_done(slot):
-                req.done = True
-                finished.append(req)
-            else:
-                self.slots[slot] = req
-        return finished
+    @property
+    def pending(self) -> List[Request]:
+        """Requests not yet slotted: queued + the in-flight chunked
+        admission (back-compat view — pre-PR3 a request stayed in
+        ``pending`` until it occupied a slot)."""
+        return [self._inflight[uid] for uid in
+                self.scheduler.admitting + self.scheduler.queued]
 
-    # ----- one batched decode tick -----
+    def _retire(self, row: int, req: Request,
+                finished: List[Request]) -> None:
+        req.done = True
+        finished.append(req)
+        self.slots[row] = None
+        self.session.retire_row(row)    # compaction: free pages, zero span
+
+    # ----- one batched engine tick -----
     def step(self) -> List[Request]:
-        """Admit, decode one strategy step for all live slots, retire
-        finished. Returns the list of requests completed this tick."""
-        finished = self._admit()
+        """Scheduled admission (≤ one prefill chunk while decode is live),
+        one strategy step for all live slots, retire + compact finished.
+        Returns the list of requests completed this tick."""
+        finished: List[Request] = []
+        live = bool(np.any(self.session.live_rows()))
+        free = [s for s in range(self.B) if self.slots[s] is None]
+        for ev in self.scheduler.tick(free, live_decode=live):
+            req = self._inflight.pop(ev.uid)
+            if req.max_new_tokens > 0:
+                req.output.append(ev.first_token)
+            if self.session.row_done(ev.row):
+                self._retire(ev.row, req, finished)
+            else:
+                self.slots[ev.row] = req
         if not np.any(self.session.live_rows()):
             return finished
         res = self.session.step()
@@ -123,15 +171,14 @@ class ServingEngine:
             req.exit_points.append(int(res.exit_layer[slot]))
             req.accept_lens.append(int(res.accept_len[slot]))
             if res.done[slot]:
-                req.done = True
-                finished.append(req)
-                self.slots[slot] = None
+                self._retire(slot, req, finished)
         return finished
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not self.pending and not np.any(self.session.live_rows()):
+            if (not self.scheduler.has_work()
+                    and not np.any(self.session.live_rows())):
                 break
         return done

@@ -170,15 +170,19 @@ def bench_exit_gate(timer: Timer) -> list:
                "speedup": t_unfused / t_fused,
                "hbm_bytes": _gate_bytes(B, D, V, k),
                "backend": jax.default_backend()}
-        if (B, D, V, k) == GATE_SHAPES[0]:
-            @jax.jit
-            def fused_kernel(hn, lm_w, ids, prev, bank, ep):
-                p_exit, probs, _ = gate_ops.exit_gate(
-                    hn, lm_w, ids, prev, bank, ep, impl="kernel")
-                tok, _ = gate_ops.verify_argmax(hn, lm_w, impl="kernel")
-                return p_exit, probs, tok
-            row["fused_kernel_us"] = _time(
-                fused_kernel, hn, lm_w, ids, prev, bank, ep, iters=10) * 1e6
+        # the Pallas chain itself, for EVERY sweep row (off-TPU it runs in
+        # interpret mode — a correctness-path datapoint, so the big shapes
+        # use few iterations; on TPU this is the headline column)
+        @jax.jit
+        def fused_kernel(hn, lm_w, ids, prev, bank, ep):
+            p_exit, probs, _ = gate_ops.exit_gate(
+                hn, lm_w, ids, prev, bank, ep, impl="kernel")
+            tok, _ = gate_ops.verify_argmax(hn, lm_w, impl="kernel")
+            return p_exit, probs, tok
+        kiters = 10 if (B, D, V, k) == GATE_SHAPES[0] or \
+            jax.default_backend() == "tpu" else 1
+        row["fused_kernel_us"] = _time(
+            fused_kernel, hn, lm_w, ids, prev, bank, ep, iters=kiters) * 1e6
         rows.append(row)
         timer.add(f"exit_gate/B{B}_D{D}_V{V}", row["fused_us"],
                   f"unfused={row['unfused_us']:.1f}us "

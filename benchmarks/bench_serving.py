@@ -1,17 +1,26 @@
-"""Serving-path A/B: paged vs dense KV cache, chunked vs blocking prefill.
+"""Serving-path A/B: paged vs dense KV cache, chunked vs blocking prefill,
+and megatick K ∈ {1, 4, 16} device-resident decode.
 
 Records ``BENCH_serving.json`` at the repo root so the serving hot loop's
-perf trajectory is tracked across PRs, mirroring ``BENCH_exit_gate.json``:
+perf trajectory is tracked across PRs, mirroring ``BENCH_exit_gate.json``.
 
-* tokens/s for a fixed request set through ``ServingEngine``, at 2–3 batch
-  sizes, paged vs dense cache and chunked vs blocking admission;
-* decode tick latency (min over interleaved rounds — the same
-  noise-symmetric min-timing harness as ``bench_predictor``).
+Admission cost and decode throughput are reported SEPARATELY (conflating
+them made blocking variants read as slow *decoders* when they were slow
+*admitters* — eager whole-prompt prefill dominated the old single number):
 
-CPU numbers are correctness-path datapoints, not perf claims: the paged win
-(skipped pages = skipped HBM traffic) and the chunked win (no head-of-line
-prompt stalls) are TPU stories; what this harness pins is that the managed
-cache and the scheduler do not regress the tick loop.
+* ``admission_ms`` / ``admission_ticks`` — wall time from first submit until
+  the scheduler has admitted every request (blocking pays it all here;
+  chunked spreads it across ticks);
+* ``decode_tok_s`` — steady-state decode throughput measured ONLY after
+  admission has drained, every slot live from tick one;
+* ``tokens_per_s`` — the old whole-round number, kept for continuity;
+* ``min_tick_us`` — min ``step()`` wall time during the decode phase (for a
+  megatick-K engine one step covers up to K device ticks).
+
+The megatick rows A/B the device-resident K-step ``lax.while_loop`` + async
+pipeline against the per-tick host-synced loop: on CPU at smoke scale the
+regime is exactly the host-sync-dominated one the megatick targets, so
+decode_tok_s should scale strongly with K (acceptance: ≥2× at K=16 vs K=1).
 
     python -m benchmarks.bench_serving
     python -m benchmarks.bench_serving --batches 2 4 --rounds 4
@@ -21,6 +30,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import os
 import time
 
@@ -43,29 +53,43 @@ def _requests(run, n, seed=0, lo=6, hi=14):
 
 
 def _one_round(se, prompts, max_new):
-    """Submit + drain one request set; returns (tokens, wall_s, ticks,
-    min_tick_s). The engine is reused across rounds so jit caches stay warm
-    (compile cost lands in the warmup round only)."""
-    for p in prompts:
-        se.submit(p, max_new_tokens=max_new)
+    """Submit one request per slot, then measure the two phases apart:
+    admission (until the scheduler drains) and steady-state decode (all
+    slots live). Returns a dict of phase numbers. The engine is reused
+    across rounds so jit caches stay warm (compile cost lands in the warmup
+    round only)."""
+    reqs = [se.submit(p, max_new_tokens=max_new) for p in prompts]
+    t0 = time.perf_counter()
+    adm_ticks = 0
+    while se.scheduler.has_work():
+        se.step()
+        adm_ticks += 1
+    t_admit = time.perf_counter() - t0
+    # async variants: a megatick dispatched inside the admission window may
+    # still be in flight — retire it BEFORE snapshotting the decode baseline,
+    # or its tokens (compute that overlapped the admission timer) leak into
+    # the decode phase and inflate decode_tok_s in proportion to K
+    if se.in_flight:
+        se.step()
+    toks0 = sum(len(r.output) for r in reqs)
     ticks = 0
     min_tick = float("inf")
-    toks = 0
-    t0 = time.perf_counter()
-    while True:
-        t1 = time.perf_counter()
-        done = se.step()
-        dt = time.perf_counter() - t1
+    t1 = time.perf_counter()
+    while se.busy:
+        t2 = time.perf_counter()
+        se.step()
+        min_tick = min(min_tick, time.perf_counter() - t2)
         ticks += 1
-        min_tick = min(min_tick, dt)
-        toks += sum(len(r.output) for r in done)
-        if (not se.scheduler.has_work()
-                and not np.any(se.session.live_rows())):
-            break
-    return toks, time.perf_counter() - t0, ticks, min_tick
+    t_decode = time.perf_counter() - t1
+    toks = sum(len(r.output) for r in reqs)
+    assert all(r.done for r in reqs)
+    return {"tokens": toks, "wall_s": t_admit + t_decode,
+            "admission_s": t_admit, "admission_ticks": adm_ticks,
+            "decode_tokens": toks - toks0, "decode_s": t_decode,
+            "decode_ticks": ticks, "min_tick_s": min_tick}
 
 
-def bench(batches, rounds, max_new, requests_per_slot):
+def bench(batches, rounds, max_new):
     base = get_config("llama2-7b").smoke()
     rows = []
     for B in batches:
@@ -74,44 +98,69 @@ def bench(batches, rounds, max_new, requests_per_slot):
         model = build_model(run)
         params = model.init(jax.random.PRNGKey(0))
         sw = eng.init_specee(model, jax.random.PRNGKey(1))
-        prompts = _requests(run, B * requests_per_slot, seed=B)
+        prompts = _requests(run, B, seed=B)
 
         variants = {
+            # cache layout × admission policy (megatick 1, blocking ticks —
+            # the historical serving loop)
             "paged+chunked": dict(cache="paged"),
             "paged+blocking": dict(cache="paged", prefill_chunk=0),
             "dense+chunked": dict(cache="dense"),
             "dense+blocking": dict(cache="dense", prefill_chunk=0),
+            # device-resident decode A/B: K ticks per fused dispatch, async
+            # pipelined serving (K=1 isolates the pipeline itself)
+            "paged+chunked+mt1": dict(cache="paged", megatick=1,
+                                      async_ticks=True),
+            "paged+chunked+mt4": dict(cache="paged", megatick=4),
+            "paged+chunked+mt16": dict(cache="paged", megatick=16),
         }
         engines = {name: ServingEngine(model, params, sw, strategy="specee",
                                        **kw)
                    for name, kw in variants.items()}
-        best = {name: {"tok_s": 0.0, "tick_us": float("inf")}
+        best = {name: {"tok_s": 0.0, "decode_tok_s": 0.0,
+                       "admission_ms": float("inf"),
+                       "tick_us": float("inf")}
                 for name in variants}
         for name, se in engines.items():            # warmup (compile)
             _one_round(se, prompts, max_new)
         for _ in range(rounds):                     # interleaved min-timing
             for name, se in engines.items():
-                toks, dt, ticks, min_tick = _one_round(se, prompts, max_new)
-                best[name]["tok_s"] = max(best[name]["tok_s"], toks / dt)
-                best[name]["tick_us"] = min(best[name]["tick_us"],
-                                            min_tick * 1e6)
-                best[name]["ticks"] = ticks
-                best[name]["tokens"] = toks
+                r = _one_round(se, prompts, max_new)
+                b = best[name]
+                b["tok_s"] = max(b["tok_s"], r["tokens"] / r["wall_s"])
+                b["decode_tok_s"] = max(
+                    b["decode_tok_s"], r["decode_tokens"] / r["decode_s"])
+                b["admission_ms"] = min(b["admission_ms"],
+                                        r["admission_s"] * 1e3)
+                b["tick_us"] = min(b["tick_us"], r["min_tick_s"] * 1e6)
+                b["ticks"] = r["decode_ticks"]
+                b["tokens"] = r["tokens"]
         for name in variants:
             se = engines[name]
+            b = best[name]
             row = {"batch": B, "variant": name,
                    "cache": se.cache_spec.kind,
                    "prefill_chunk": se.scheduler.chunk_tokens or 0,
                    "page_size": se.cache_spec.page_size,
-                   "tokens_per_s": round(best[name]["tok_s"], 2),
-                   "min_tick_us": round(best[name]["tick_us"], 1),
-                   "ticks": best[name]["ticks"],
-                   "tokens": best[name]["tokens"],
+                   "megatick": se.megatick,
+                   "async_ticks": se.async_ticks,
+                   # non-finite → None: a round can finish entirely inside
+                   # the admission phase (e.g. --max-new 1), leaving no
+                   # decode ticks — inf would serialize as invalid JSON
+                   "decode_tok_s": round(b["decode_tok_s"], 2),
+                   "admission_ms": round(b["admission_ms"], 2),
+                   "tokens_per_s": round(b["tok_s"], 2),
+                   "min_tick_us": (round(b["tick_us"], 1)
+                                   if math.isfinite(b["tick_us"]) else None),
+                   "ticks": b["ticks"],
+                   "tokens": b["tokens"],
                    "backend": jax.default_backend()}
             rows.append(row)
-            print(f"[bench_serving] B={B} {name:16s} "
-                  f"{row['tokens_per_s']:8.1f} tok/s  "
-                  f"tick={row['min_tick_us']:8.1f}us  ticks={row['ticks']}")
+            print(f"[bench_serving] B={B} {name:18s} "
+                  f"decode={row['decode_tok_s']:8.1f} tok/s  "
+                  f"admit={row['admission_ms']:8.1f}ms  "
+                  f"overall={row['tokens_per_s']:7.1f} tok/s  "
+                  f"ticks={row['ticks']}")
     with open(_JSON, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"[bench_serving] wrote {_JSON}")
@@ -122,7 +171,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--batches", type=int, nargs="+", default=[2, 4, 8])
     ap.add_argument("--rounds", type=int, default=6)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--requests-per-slot", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=32)
     args = ap.parse_args()
-    bench(args.batches, args.rounds, args.max_new, args.requests_per_slot)
+    bench(args.batches, args.rounds, args.max_new)

@@ -7,11 +7,25 @@ candidate-optimization flags, and report the roofline-term deltas.
 Cells and candidate ladders are defined in CELLS below; every variant is a
 full ``.lower().compile()`` against the production mesh (same artifact class
 as the dry-run), so before/after numbers are measured, not estimated.
+
+Verify-kernel vocab-tile sweep (ROADMAP: block_v=512 was a guess):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --gate-blocks
+
+times the streaming argmax-verify + top-k-verify pair across
+``tuning.BLOCK_V_CANDIDATES`` per (D, V) shape (interleaved min-timing, the
+same noise-symmetric harness as bench_predictor) and caches the winners in
+``src/repro/configs/gate_blocks.json``, keyed by backend — the table
+``exit_gate.ops`` consults whenever a caller leaves ``block_v`` unset. The
+top-k kernel shares the argmax kernel's tiling knobs, so one sweep scores
+their combined runtime.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.models.model import ModelFlags
@@ -94,12 +108,92 @@ def run_variants(cell_id: str, multi_pod: bool = False) -> List[Dict[str, Any]]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# verify-kernel vocab-tile sweep
+# ---------------------------------------------------------------------------
+# (B, D, V): gate smoke scale, 7B-ish and 70B-ish decode shapes, a
+# large-vocab frontier shape — the verify kernels see (B·N) rows in tree
+# mode, so B stays modest
+GATE_BLOCK_SHAPES = [(8, 128, 512), (8, 1024, 16000), (8, 2048, 32000),
+                     (8, 4096, 128256)]
+
+
+def sweep_gate_blocks(rounds: int = 8, iters: int = 5,
+                      write_table: bool = True) -> Dict[str, int]:
+    """Sweep ``block_v`` for the streaming verify pair per (D, V).
+
+    Times the impl the platform actually streams with ("kernel" on TPU,
+    "xla" scan off-TPU — "ref" ignores the knob), interleaving candidates
+    round-robin and keeping per-candidate minimums so shared-machine noise
+    hits all candidates symmetrically. Scores argmax + top-k combined and
+    merges the winners into repro/configs/gate_blocks.json under the
+    current backend's key.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import on_tpu
+    from repro.kernels.exit_gate import ops as gate_ops
+    from repro.kernels.exit_gate import tuning
+
+    impl = "kernel" if on_tpu() else "xla"
+    k = 4
+    best: Dict[str, int] = {}
+    for B, D, V in GATE_BLOCK_SHAPES:
+        hn = jax.random.normal(jax.random.PRNGKey(0), (B, D))
+        lm_w = jax.random.normal(jax.random.PRNGKey(1), (D, V)) * 0.05
+        cands = [bv for bv in tuning.BLOCK_V_CANDIDATES if bv <= max(V, 128)]
+        fns = {}
+        for bv in cands:
+            fns[bv] = (
+                jax.jit(lambda h, w, bv=bv: gate_ops.verify_argmax(
+                    h, w, impl=impl, block_v=bv)),
+                jax.jit(lambda h, w, bv=bv: gate_ops.verify_topk(
+                    h, w, k, impl=impl, block_v=bv)))
+            for f in fns[bv]:
+                jax.block_until_ready(f(hn, lm_w))          # compile
+        t_best = {bv: float("inf") for bv in cands}
+        for _ in range(rounds):
+            for bv in cands:
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    out_a = fns[bv][0](hn, lm_w)
+                    out_t = fns[bv][1](hn, lm_w)
+                jax.block_until_ready((out_a, out_t))
+                t_best[bv] = min(t_best[bv],
+                                 (time.perf_counter() - t0) / iters)
+        win = min(t_best, key=t_best.get)
+        best[f"{D}x{V}"] = win
+        print(f"[gate-blocks] B={B} D={D} V={V}: block_v={win} "
+              + " ".join(f"{bv}:{t_best[bv]*1e6:.0f}us" for bv in cands))
+    if write_table:
+        backend = jax.default_backend()
+        table = dict(tuning._table())
+        table[backend] = {**table.get(backend, {}), **best}
+        os.makedirs(os.path.dirname(tuning.TABLE_PATH), exist_ok=True)
+        with open(tuning.TABLE_PATH, "w") as f:
+            json.dump(table, f, indent=1, sort_keys=True)
+        tuning.reload_table()
+        print(f"[gate-blocks] wrote {tuning.TABLE_PATH} ({backend})")
+    return best
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--cell", choices=sorted(CELLS))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--gate-blocks", action="store_true",
+                    help="sweep verify-kernel block_v per (D, V) and cache "
+                         "the winners in repro/configs/gate_blocks.json")
+    ap.add_argument("--no-write", action="store_true",
+                    help="with --gate-blocks: report only, don't rewrite "
+                         "the cached table")
     args = ap.parse_args()
+    if args.gate_blocks:
+        sweep_gate_blocks(write_table=not args.no_write)
+        return
+    if args.cell is None:
+        ap.error("one of --cell or --gate-blocks is required")
     recs = run_variants(args.cell, args.multi_pod)
     if args.out:
         with open(args.out, "w") as f:

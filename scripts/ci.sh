@@ -33,4 +33,10 @@ if [ "$#" -eq 0 ]; then
   echo "[ci] launch/serve.py --ci --page-size 16 (paged smoke)"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --ci --page-size 16
+  # megatick serving smoke: device-resident K-tick decode + async pipeline.
+  # --ci with --megatick > 1 asserts completion, zero page leak, and token
+  # parity against a megatick=1 reference run internally.
+  echo "[ci] launch/serve.py --ci --megatick 8 (megatick smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --megatick 8
 fi

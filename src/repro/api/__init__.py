@@ -27,7 +27,8 @@ migration table from the old direct step-function calls and from
 from repro.api.cache import (CacheSpec, DenseKVCache, KVCacheManager,
                              PagedKVCache, make_cache_manager)
 from repro.api.scheduler import Admitted, ChunkedPrefillScheduler
-from repro.api.session import Admission, DecodeSession, Engine
+from repro.api.session import (Admission, DecodeSession, Engine,
+                               MegatickHandle)
 from repro.api.strategies import (DecodeStrategy, DenseStrategy,
                                   SpecEEStrategy, TreeStrategy, get_strategy)
 from repro.api.types import StepResult
@@ -37,4 +38,5 @@ __all__ = [
     "DenseStrategy", "SpecEEStrategy", "TreeStrategy", "get_strategy",
     "CacheSpec", "KVCacheManager", "DenseKVCache", "PagedKVCache",
     "make_cache_manager", "ChunkedPrefillScheduler", "Admitted", "Admission",
+    "MegatickHandle",
 ]

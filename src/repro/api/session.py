@@ -8,9 +8,23 @@
 
 ``Engine`` binds (model, params, SpecEE weights, strategy) and jits the
 strategy step exactly once; sessions share the compiled step. A session owns
-one batched ``DecodeState`` plus the host-side bookkeeping jit can't express:
-per-row token budgets, EOS cut-off, and the ``done`` mask of the canonical
-``StepResult``.
+one batched ``DecodeState`` plus per-row token budgets, EOS cut-off, and the
+``done`` mask of the canonical ``StepResult``. For single steps that
+bookkeeping runs host-side (the historical path, bit-preserved); for
+``step(num_ticks=K)`` it moves INTO the jit as a device-resident carry so K
+ticks run as one fused ``lax.while_loop`` ("megatick") with a single host
+sync at the end — see DESIGN.md §6. The step/extend jits donate the decode
+state (KV cache included, paged pools and page table too), so XLA updates
+the cache in place instead of reallocating it every token; callers must not
+read a state reference retained from before a step (donation deletes the
+buffers loudly rather than corrupting them).
+
+``step_async`` is the serving engine's pipelined variant: it dispatches a
+megatick and returns a handle without blocking, keeping the budget/EOS/done
+carry device-resident across megaticks so the NEXT megatick can dispatch
+before the previous one's results are read (``finish_step`` syncs results +
+host mirrors; admission/retirement between finish and the next dispatch
+mirror their row edits onto the in-flight carry).
 
 Session memory is owned by a ``KVCacheManager`` (``repro.api.cache``):
 ``new_session(..., cache="paged")`` swaps the slot-masked dense layout for
@@ -47,10 +61,29 @@ from repro.api.strategies import DecodeStrategy, get_strategy
 from repro.api.types import StepResult
 
 _NO_BUDGET = np.iinfo(np.int64).max
+_DEV_NO_BUDGET = np.iinfo(np.int32).max     # device-carry budget cap
 
 # back-compat alias: the row-insert helper moved to repro.api.cache so the
 # cache managers share it
 _insert_row = insert_row_pytree
+
+
+@dataclass
+class MegatickHandle:
+    """One dispatched-but-unread megatick (``DecodeSession.step_async``).
+
+    ``out``/``carry`` hold device arrays that are still being computed;
+    ``finish_step`` blocks on them. The carry captured here is the megatick's
+    OUTPUT limits — the exact arrays the next megatick consumes as input.
+    ``dirty`` collects rows whose HOST bookkeeping advanced after this
+    dispatch (retire / re-admit mirror edits): for those rows the captured
+    carry is stale, so ``finish_step`` keeps the host values instead of
+    syncing from it.
+    """
+    out: Any
+    carry: Any
+    num_ticks: int
+    dirty: set = field(default_factory=set)
 
 
 class Engine:
@@ -64,10 +97,33 @@ class Engine:
         self.strategy = get_strategy(strategy)
         self.strategy.validate(model, sw)
         strat = self.strategy
+        # the decode state (KV cache pytree included — paged pools + page
+        # table too) is DONATED: XLA updates the cache in place every tick
+        # instead of reallocating it, and stale state references fail loudly
         self._step_jit = jax.jit(
-            lambda p, s, st: strat.step(model, p, s, st))
+            lambda p, s, st: strat.step(model, p, s, st),
+            donate_argnums=(2,))
         self._extend_jit = jax.jit(
-            lambda p, toks, cache, n: model.prefill_extend(p, toks, cache, n))
+            lambda p, toks, cache, n: model.prefill_extend(p, toks, cache, n),
+            donate_argnums=(2,))
+        self._mega_jits = {}
+
+    def megatick_jit(self, num_ticks: int):
+        """The jitted K-tick fused step (compiled once per K). The state —
+        where the KV cache lives — is donated; the (B,)-sized limits carry is
+        NOT: the async pipeline passes megatick N's output limits straight
+        into megatick N+1 while N's handle still holds them for the deferred
+        host sync, so donating them would delete buffers the finish path
+        reads."""
+        fn = self._mega_jits.get(num_ticks)
+        if fn is None:
+            strat, model = self.strategy, self.model
+            fn = jax.jit(
+                lambda p, s, st, limits: strat.megatick(model, p, s, st,
+                                                        limits, num_ticks),
+                donate_argnums=(2,))
+            self._mega_jits[num_ticks] = fn
+        return fn
 
     @classmethod
     def create(cls, model: Model, params, sw=None,
@@ -136,6 +192,14 @@ class DecodeSession:
         self._state: Optional[eng.DecodeState] = None
         self.cache_mgr: Optional[KVCacheManager] = None
         self.batch: Optional[int] = None
+        # device-resident decode limits (budget/emitted/eos/done/retired):
+        # None = host bookkeeping is authoritative, rebuilt lazily at the
+        # next megatick dispatch; non-None = carried device arrays threading
+        # megatick→megatick (admission/retire mirror row edits onto them)
+        self._dev_carry: Optional[dict] = None
+        # dispatched-but-unread megaticks, oldest first (the async pipeline
+        # dispatches N+1 before finishing N, so two can be outstanding)
+        self._async_handles: List[MegatickHandle] = []
         if batch is not None:
             if max_seq is None:
                 max_seq = engine.model.run.serve.max_seq_len
@@ -163,6 +227,49 @@ class DecodeSession:
         # rows compacted by retire_row: their logical length is pinned to 0
         # after every tick (the batched step advances len uniformly)
         self._retired: set = set()
+        self._dev_carry = None
+
+    # ----- device-side decode-limit carry (megatick path) -----
+    def _carry_from_host(self) -> dict:
+        """Materialize the device-side limits from the host bookkeeping
+        (dispatch-time lazy rebuild; 5 small (B,) transfers)."""
+        B = self.batch
+        retired = np.zeros(B, bool)
+        if self._retired:
+            retired[sorted(self._retired)] = True
+        return {
+            "budget": jnp.asarray(np.minimum(self._budget, _DEV_NO_BUDGET)
+                                  .astype(np.int32)),
+            "emitted": jnp.asarray(
+                np.minimum(self._emitted, _DEV_NO_BUDGET).astype(np.int32)),
+            "eos": jnp.asarray(np.asarray(
+                [-1 if e is None else int(e) for e in self._eos], np.int32)),
+            "done": jnp.asarray(self._done),
+            "retired": jnp.asarray(retired),
+        }
+
+    def _mirror_row_to_dev(self, row: int) -> None:
+        """Apply one row's host bookkeeping onto the in-flight device carry
+        (enqueued .at ops, no sync) — admission/retirement between a megatick
+        dispatch and the next must edit the carried arrays, not just the
+        host mirrors the carry will overwrite at the next finish."""
+        c = self._dev_carry
+        if c is None:
+            return
+        eos = self._eos[row]
+        self._dev_carry = {
+            "budget": c["budget"].at[row].set(
+                int(min(self._budget[row], _DEV_NO_BUDGET))),
+            "emitted": c["emitted"].at[row].set(
+                int(min(self._emitted[row], _DEV_NO_BUDGET))),
+            "eos": c["eos"].at[row].set(-1 if eos is None else int(eos)),
+            "done": c["done"].at[row].set(bool(self._done[row])),
+            "retired": c["retired"].at[row].set(row in self._retired),
+        }
+        # outstanding megaticks were dispatched with a carry that predates
+        # this edit: their finish must not roll the row's host mirrors back
+        for h in self._async_handles:
+            h.dirty.add(row)
 
     def _set_row_limits(self, row: int, max_new_tokens: Optional[int],
                         eos_token: Optional[int]) -> None:
@@ -190,7 +297,12 @@ class DecodeSession:
         return count
 
     def _wrap(self, raw: StepResult) -> StepResult:
-        """Device → host + per-row budget/EOS accounting → canonical result."""
+        """Device → host + per-row budget/EOS accounting → canonical result.
+
+        The single-tick path: accounting runs host-side, so any carried
+        device limits are stale afterwards — drop them (the next megatick
+        rebuilds from the host, which is authoritative here)."""
+        self._dev_carry = None
         tokens = np.asarray(raw.tokens)
         counts = np.asarray(raw.counts).copy()
         for row in range(tokens.shape[0]):
@@ -220,12 +332,18 @@ class DecodeSession:
     def retire_row(self, row: int) -> None:
         """Per-row compaction: release the finished row's cache footprint so
         the idle slot stops paying attention span (paged: pages return to
-        the free list; dense: the logical length drops to zero)."""
+        the free list; dense: the logical length drops to zero).
+
+        Safe under an in-flight megatick: the cache edits are functional ops
+        enqueued on the in-flight output state (device ordering serializes
+        them after the megatick's writes), and the row's done/retired bits
+        are mirrored onto the carried limits so the NEXT megatick skips it."""
         assert self._state is not None and self.cache_mgr is not None
         self._done[row] = True
         self._retired.add(row)
         self._state = self._state._replace(
             cache=self.cache_mgr.retire_row(self._state.cache, row))
+        self._mirror_row_to_dev(row)
 
     def row_span(self, row: int) -> int:
         """Attention span the row currently pays (tests/benchmarks)."""
@@ -302,6 +420,7 @@ class DecodeSession:
         tok = int(np.asarray(st1.last_token)[0])
         n = self._account_row(row, np.asarray([tok]), 1)
         assert n <= 1
+        self._mirror_row_to_dev(row)
         return tok
 
     def prefill_row(self, row: int, prompt,
@@ -400,16 +519,86 @@ class DecodeSession:
         adm.h_parts = []
 
     # ----- decode tick -----
-    def step(self) -> StepResult:
-        """One batched decode tick through the strategy's jitted step."""
+    def step(self, num_ticks: Optional[int] = None) -> StepResult:
+        """Batched decode through the strategy's jitted step.
+
+        ``num_ticks=None``/``1``: one tick, host-side budget/EOS accounting —
+        the historical path, bit-preserved. ``num_ticks=K > 1``: one fused
+        device-resident megatick (K ticks in one ``lax.while_loop`` with the
+        accounting in the jitted carry and ONE host sync at the end) —
+        token-identical to K single steps; the StepResult widens to the
+        (B, K·W) megatick contract (see ``repro.api.types``).
+        """
         assert self._state is not None, "prefill first"
+        assert not self._async_handles, \
+            "async megaticks are in flight; finish_step() them first"
+        if num_ticks is None or int(num_ticks) == 1:
+            e = self.engine
+            raw, self._state = e._step_jit(e.params, e.sw, self._state)
+            if self._retired:
+                # compaction is sticky: the uniform len advance of the
+                # batched step must not regrow a retired row's span
+                cache = self._state.cache
+                rows = jnp.asarray(sorted(self._retired), jnp.int32)
+                self._state = self._state._replace(
+                    cache=dict(cache, len=cache["len"].at[rows].set(0)))
+            return self._wrap(raw)
+        return self.finish_step(self.step_async(num_ticks))
+
+    def step_async(self, num_ticks: int = 1) -> MegatickHandle:
+        """Dispatch one megatick WITHOUT blocking on its results.
+
+        The budget/EOS/done carry stays device-resident across async
+        megaticks, so the caller may dispatch megatick N+1 before reading
+        megatick N's results (the serving engine's pipeline) — correctness
+        holds because the done mask travels in the carry, not on the host.
+        Outstanding handles retire in dispatch order via ``finish_step``.
+        """
+        assert self._state is not None, "prefill first"
+        K = int(num_ticks)
+        assert K >= 1, f"num_ticks must be >= 1, got {K}"
         e = self.engine
-        raw, self._state = e._step_jit(e.params, e.sw, self._state)
-        if self._retired:
-            # compaction is sticky: the uniform len advance of the batched
-            # step must not regrow a retired row's attention span
-            cache = self._state.cache
-            rows = jnp.asarray(sorted(self._retired), jnp.int32)
-            self._state = self._state._replace(
-                cache=dict(cache, len=cache["len"].at[rows].set(0)))
-        return self._wrap(raw)
+        carry = (self._dev_carry if self._dev_carry is not None
+                 else self._carry_from_host())
+        out, self._state, carry = e.megatick_jit(K)(e.params, e.sw,
+                                                    self._state, carry)
+        self._dev_carry = carry
+        handle = MegatickHandle(out=out, carry=carry, num_ticks=K)
+        self._async_handles.append(handle)
+        return handle
+
+    def finish_step(self, handle: MegatickHandle) -> StepResult:
+        """Block on a dispatched megatick, sync host mirrors from its carry,
+        and wrap the canonical (widened) StepResult. Handles finish oldest
+        first (host mirrors advance monotonically through the pipeline), and
+        finishing must precede any admission/retirement that reacts to the
+        megatick's results."""
+        assert self._async_handles and self._async_handles[0] is handle, \
+            "megaticks finish in dispatch order (oldest handle first)"
+        self._async_handles.pop(0)
+        out = handle.out
+        done = np.asarray(out["done"]).copy()
+        emitted = np.asarray(handle.carry["emitted"]).astype(np.int64)
+        # rows retired / re-admitted after this megatick's dispatch: the
+        # host bookkeeping advanced past the dispatch-time carry — keep it
+        # (the edit was mirrored onto the NEXT megatick's input, whose
+        # finish will sync it back coherently)
+        for row in handle.dirty:
+            done[row] = self._done[row]
+            emitted[row] = self._emitted[row]
+        self._done = done
+        self._emitted = emitted
+        return StepResult(
+            tokens=np.asarray(out["tokens"]),
+            counts=np.asarray(out["counts"]),
+            # the result's mask is the megatick's own dispatch-coherent view
+            # (what _collect attributes to the dispatch-time slot snapshot),
+            # not the merged host view — they differ only on dirty rows
+            done=np.asarray(out["done"]),
+            exit_layer=np.asarray(out["exit_layer"]),
+            accept_len=np.asarray(out["accept_len"]),
+            exited=np.asarray(out["exited"]),
+            units_run=np.asarray(out["units_run"]),
+            ticks=int(np.asarray(out["ticks"])),
+            tick_counts=np.asarray(out["tick_counts"]),
+            tick_live=np.asarray(out["tick_live"]))

@@ -83,6 +83,25 @@ class DecodeStrategy:
              ) -> Tuple[StepResult, eng.DecodeState]:
         raise NotImplementedError
 
+    def megatick(self, model: Model, params, sw, state: eng.DecodeState,
+                 limits, num_ticks: int):
+        """Fuse ``num_ticks`` strategy steps into one device-resident
+        ``lax.while_loop`` (``engine.megatick_decode``): per-row budgets, EOS
+        cut-off, and the done mask ride in the jitted carry, so host sync
+        happens once per megatick instead of once per tick. Works unchanged
+        for every strategy — the adapter below is the only mode-specific
+        glue. Returns ``(out dict, new_state, new_limits)``."""
+        def tick(st):
+            res, new_st = self.step(model, params, sw, st)
+            return eng.TickEmit(tokens=res.tokens, counts=res.counts,
+                                exit_layer=res.exit_layer,
+                                accept_len=res.accept_len,
+                                exited=res.exited,
+                                units_run=res.units_run), new_st
+        return eng.megatick_decode(tick, state, limits, num_ticks,
+                                   self.emit_width(model),
+                                   model.num_exit_points)
+
 
 @dataclass(frozen=True)
 class DenseStrategy(DecodeStrategy):

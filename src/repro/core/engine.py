@@ -531,6 +531,122 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     return out_tokens, n_emit, new_state, info
 
 
+# ---------------------------------------------------------------------------
+# device-resident multi-tick decode ("megatick")
+# ---------------------------------------------------------------------------
+class TickEmit(NamedTuple):
+    """Raw per-tick emit of one strategy step, as the megatick loop sees it."""
+    tokens: jnp.ndarray         # (B, W) int32 — left-aligned emitted tokens
+    counts: jnp.ndarray         # (B,) int32 — valid tokens this tick
+    exit_layer: jnp.ndarray     # (B,) int32
+    accept_len: jnp.ndarray     # (B,) int32
+    exited: jnp.ndarray         # (B,) bool
+    units_run: jnp.ndarray      # () int32
+
+
+def megatick_decode(tick_fn, state: DecodeState, limits: Dict[str, jnp.ndarray],
+                    num_ticks: int, emit_width: int, num_exit_points: int
+                    ) -> Tuple[Dict[str, jnp.ndarray], DecodeState,
+                               Dict[str, jnp.ndarray]]:
+    """Fuse ``num_ticks`` strategy steps into one ``lax.while_loop``.
+
+    ``tick_fn(state) -> (TickEmit, new_state)`` is one batched strategy step
+    (any decode mode). The per-row token budgets, EOS cut-off, and done mask —
+    historically host-side Python in ``DecodeSession`` — live in the jitted
+    carry, so the whole megatick runs device-resident: emits accumulate into a
+    ``(B, K*W)`` buffer at per-row offsets, per-tick exit-layer/accept-length
+    stats land in ``(B, K)`` columns, and the loop exits early once every row
+    is done. Rows retired mid-flight (``limits["retired"]``) have their
+    logical cache length re-pinned to zero after every tick, preserving the
+    session's sticky-compaction invariant without a host sync.
+
+    Accounting is tick-for-tick identical to ``DecodeSession._account_row``:
+    budget clip first, EOS scan within the clipped window, ``done`` on EOS hit
+    or budget exhaustion; rows already done keep stepping (their emits are
+    dropped — exactly what K single host-accounted steps do) so device state
+    stays bit-identical to the unfused loop.
+
+    Returns ``(out, final_state, new_limits)`` where ``out`` holds tokens
+    (B, K·W), counts (B,), per-tick stat planes (B, K), ``ticks`` actually
+    run, and the final done mask; ``new_limits`` is the advanced carry for
+    the next megatick (device-resident across calls — no host round-trip).
+    """
+    K, W = int(num_ticks), int(emit_width)
+    B = state.last_token.shape[0]
+    buf_len = K * W
+    budget = limits["budget"]
+    eos = limits["eos"]
+    retired = limits["retired"]
+    lanes = jnp.arange(W)
+
+    def write_rows(buf, off, toks, kept):
+        # per-row scatter at the row's running offset; lanes >= kept map out
+        # of range and drop (the buffer is exactly K*W: a row that keeps j
+        # tokens per tick never writes past its own accumulated count)
+        idx = jnp.where(lanes[None, :] < kept[:, None],
+                        off[:, None] + lanes[None, :], buf_len)
+        return jax.vmap(lambda b, i, t: b.at[i].set(t, mode="drop"))(
+            buf, idx, toks)
+
+    def cond(c):
+        return (c["t"] < K) & ~jnp.all(c["done"])
+
+    def body(c):
+        t, done, emitted = c["t"], c["done"], c["emitted"]
+        em, st = tick_fn(c["state"])
+        live = ~done
+        # budget clip, then EOS scan within the clipped window (the exact
+        # order of the host-side _account_row)
+        kept = jnp.maximum(jnp.minimum(em.counts, budget - emitted), 0)
+        is_eos = ((em.tokens == eos[:, None]) & (eos >= 0)[:, None]
+                  & (lanes[None, :] < kept[:, None]))
+        has_eos = jnp.any(is_eos, axis=1)
+        kept = jnp.where(has_eos,
+                         jnp.argmax(is_eos, axis=1).astype(jnp.int32) + 1,
+                         kept)
+        kept = jnp.where(live, kept, 0)
+        emitted = emitted + kept
+        done = done | (live & (has_eos | (emitted >= budget)))
+        buf = write_rows(c["buf"], c["counts"], em.tokens, kept)
+        # sticky compaction: the batched tick advances len uniformly; a
+        # retired row's span must stay pinned to zero
+        cache = st.cache
+        st = st._replace(cache=dict(cache,
+                                    len=jnp.where(retired, 0, cache["len"])))
+        return dict(
+            state=st, t=t + 1, done=done, emitted=emitted, buf=buf,
+            counts=c["counts"] + kept,
+            exit_layer=c["exit_layer"].at[:, t].set(em.exit_layer),
+            accept_len=c["accept_len"].at[:, t].set(em.accept_len),
+            exited=c["exited"].at[:, t].set(em.exited),
+            tick_counts=c["tick_counts"].at[:, t].set(kept),
+            tick_live=c["tick_live"].at[:, t].set(live),
+            units=c["units"] + em.units_run,
+        )
+
+    init = dict(
+        state=state, t=jnp.int32(0), done=limits["done"],
+        emitted=limits["emitted"],
+        buf=jnp.zeros((B, buf_len), jnp.int32),
+        counts=jnp.zeros((B,), jnp.int32),
+        exit_layer=jnp.full((B, K), num_exit_points, jnp.int32),
+        accept_len=jnp.zeros((B, K), jnp.int32),
+        exited=jnp.zeros((B, K), bool),
+        tick_counts=jnp.zeros((B, K), jnp.int32),
+        tick_live=jnp.zeros((B, K), bool),
+        units=jnp.int32(0),
+    )
+    fin = jax.lax.while_loop(cond, body, init)
+    out = {"tokens": fin["buf"], "counts": fin["counts"],
+           "exit_layer": fin["exit_layer"], "accept_len": fin["accept_len"],
+           "exited": fin["exited"], "tick_counts": fin["tick_counts"],
+           "tick_live": fin["tick_live"], "ticks": fin["t"],
+           "units_run": fin["units"], "done": fin["done"]}
+    new_limits = {"budget": budget, "emitted": fin["emitted"], "eos": eos,
+                  "done": fin["done"], "retired": retired}
+    return out, fin["state"], new_limits
+
+
 def init_tree_decode_state(model: Model, params: Params, sw: SpecEEWeights,
                            batch: Dict[str, jnp.ndarray], max_seq: int,
                            tree) -> Tuple[jnp.ndarray, DecodeState]:

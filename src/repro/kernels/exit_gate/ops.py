@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.kernels import on_tpu
 from repro.kernels.exit_gate import ref as gate_ref
+from repro.kernels.exit_gate import tuning
 from repro.kernels.exit_gate.exit_gate import (argmax_verify_fused,
                                                exit_gate_fused)
 
@@ -140,7 +141,7 @@ def _verify_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray,
 
 @partial(jax.jit, static_argnames=("impl", "block_v", "block_d"))
 def verify_argmax(hn: jnp.ndarray, lm_head: jnp.ndarray,
-                  impl: Optional[str] = None, block_v: int = 512,
+                  impl: Optional[str] = None, block_v: Optional[int] = None,
                   block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-LM-head argmax for verification. hn: (B, D); lm_head: (D, V).
 
@@ -149,9 +150,14 @@ def verify_argmax(hn: jnp.ndarray, lm_head: jnp.ndarray,
     matmul in ``hn.dtype``. Auto resolves to "kernel" on TPU (where the
     saved logits round-trips are HBM traffic) and to "ref" on CPU, where
     one BLAS GEMM beats any streaming formulation and the memory win is
-    moot. Returns (token (B,) int32, max logit (B,) fp32).
+    moot. ``block_v=None`` takes the autotuned vocab-strip width for this
+    (D, V) from ``tuning.best_block_v`` (swept by ``hillclimb.py
+    --gate-blocks``, cached in repro/configs/gate_blocks.json).
+    Returns (token (B,) int32, max logit (B,) fp32).
     """
     impl = _resolve(impl, cpu_default="ref")
+    if block_v is None:
+        block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[1])
     if impl == "kernel":
         return argmax_verify_fused(hn, lm_head, block_v=block_v,
                                    block_d=block_d)
@@ -198,7 +204,7 @@ def _topk_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
 
 @partial(jax.jit, static_argnames=("k", "impl", "block_v", "block_d"))
 def verify_topk(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
-                impl: Optional[str] = None, block_v: int = 512,
+                impl: Optional[str] = None, block_v: Optional[int] = None,
                 block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-LM-head top-k — the streaming sibling of ``verify_argmax`` for
     the draft proposal path. hn: (B, D); lm_head: (D, V).
@@ -206,10 +212,14 @@ def verify_topk(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
     "kernel"/"xla" tile the vocab keeping a running per-row top-k with fp32
     accumulation and never materialize (B, V); "ref" is ``propose_topk``'s
     historical materialized matmul in ``hn.dtype`` + ``jax.lax.top_k``. Auto
-    resolves like ``verify_argmax`` (kernel on TPU, ref on CPU). Returns
-    (ids (B, k) int32, vals (B, k) fp32), descending by logit.
+    resolves like ``verify_argmax`` (kernel on TPU, ref on CPU).
+    ``block_v=None`` takes the autotuned strip width (the top-k kernel
+    shares the argmax kernel's tiling knobs — same sweep, same table).
+    Returns (ids (B, k) int32, vals (B, k) fp32), descending by logit.
     """
     impl = _resolve(impl, cpu_default="ref")
+    if block_v is None:
+        block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[1])
     if impl == "kernel":
         from repro.kernels.exit_gate.exit_gate import topk_verify_fused
         return topk_verify_fused(hn, lm_head, k, block_v=block_v,

@@ -1,0 +1,73 @@
+"""Verify-kernel vocab-tile autotuning (ROADMAP: block_v was a guess).
+
+The streaming argmax-verify and top-k-verify kernels tile the vocab axis in
+``block_v``-column strips; the best strip width depends on (D, V) and the
+backend (VMEM residency vs. grid overhead on TPU, scan-step overhead on the
+XLA-CPU streaming path). ``benchmarks/hillclimb.py --gate-blocks`` sweeps
+the candidates per shape with the same measured-not-estimated harness as the
+roofline cells and caches the winners in ``repro/configs/gate_blocks.json``,
+keyed by backend:
+
+    {"cpu": {"1024x16000": 1024, ...}, "tpu": {...}}
+
+``best_block_v`` consults that table (exact shape first, then the
+log-distance-nearest swept shape) and falls back to the historical default
+of 512 when nothing applies. The argmax and top-k kernels share the tiling
+knobs — one sweep serves both (the sweep scores their combined runtime).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from functools import lru_cache
+from typing import Dict, Optional
+
+DEFAULT_BLOCK_V = 512
+
+# candidate strip widths the sweep explores (powers of two spanning "many
+# tiny grid steps" to "one strip is most of a small vocab")
+BLOCK_V_CANDIDATES = (128, 256, 512, 1024, 2048)
+
+TABLE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "configs", "gate_blocks.json")
+
+
+@lru_cache(maxsize=None)
+def _table() -> Dict[str, Dict[str, int]]:
+    try:
+        with open(TABLE_PATH) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def reload_table() -> None:
+    """Drop the cached table (after a sweep rewrites the JSON)."""
+    _table.cache_clear()
+
+
+def best_block_v(d_model: int, vocab: int,
+                 backend: Optional[str] = None) -> int:
+    """The swept vocab-strip width for a (D, V) verify shape.
+
+    Exact table hit wins; otherwise the nearest swept shape by log-space
+    distance (tile choice tracks scale, not exact dims); otherwise the
+    historical default of 512.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    entries = _table().get(backend, {})
+    if not entries:
+        return DEFAULT_BLOCK_V
+    key = f"{d_model}x{vocab}"
+    if key in entries:
+        return int(entries[key])
+
+    def dist(k: str) -> float:
+        d, v = (int(x) for x in k.split("x"))
+        return (abs(math.log(d_model / d)) + abs(math.log(vocab / v)))
+
+    return int(entries[min(entries, key=dist)])

@@ -43,6 +43,14 @@ def main() -> None:
                     help="Sarathi-style chunked-prefill budget per tick "
                          "(0 = blocking admission; default: "
                          "ServeConfig.prefill_chunk)")
+    ap.add_argument("--megatick", type=int, default=1,
+                    help="decode ticks fused into one device-resident "
+                         "lax.while_loop dispatch (1 = historical per-tick "
+                         "host sync); > 1 also pipelines serving ticks "
+                         "(async dispatch-ahead)")
+    ap.add_argument("--sync-ticks", action="store_true",
+                    help="disable the async serving pipeline even with "
+                         "--megatick > 1")
     ap.add_argument("--ci", action="store_true",
                     help="CI smoke: few short requests + completion asserts")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -81,24 +89,32 @@ def main() -> None:
                      "verification is argmax-defined; see ROADMAP)")
         from repro.api import DenseStrategy
         strategy = DenseStrategy(temperature=args.temperature)
-    engine = ServingEngine(model, params, sw, strategy=strategy,
-                           prng_seed=args.seed,
-                           fused_gate=not args.no_fused_gate,
-                           cache=args.cache, page_size=args.page_size,
-                           prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        engine.submit(rng.integers(0, run.model.vocab_size,
-                                   int(rng.integers(4, 16))),
-                      max_new_tokens=args.max_new)
-    t0 = time.perf_counter()
-    done = engine.run_to_completion()
-    dt = time.perf_counter() - t0
+    prompts = [rng.integers(0, run.model.vocab_size,
+                            int(rng.integers(4, 16)))
+               for _ in range(args.requests)]
+
+    def run_engine(megatick: int):
+        engine = ServingEngine(model, params, sw, strategy=strategy,
+                               prng_seed=args.seed,
+                               fused_gate=not args.no_fused_gate,
+                               cache=args.cache, page_size=args.page_size,
+                               prefill_chunk=args.prefill_chunk,
+                               megatick=megatick,
+                               async_ticks=False if args.sync_ticks else None)
+        for p in prompts:
+            engine.submit(p, max_new_tokens=args.max_new)
+        t0 = time.perf_counter()
+        done = engine.run_to_completion()
+        return engine, done, time.perf_counter() - t0
+
+    engine, done, dt = run_engine(args.megatick)
     toks = sum(len(r.output) for r in done)
     mgr = engine.session.cache_mgr
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s, mode={mode}, cache={mgr.kind}, "
           f"chunk={engine.scheduler.chunk_tokens}, "
+          f"megatick={args.megatick}, async={engine.async_ticks}, "
           f"fused_gate={not args.no_fused_gate})")
     if args.ci:
         assert len(done) == args.requests, \
@@ -108,8 +124,25 @@ def main() -> None:
         if mgr.kind == "paged":
             assert mgr.free_pages == mgr.num_pages, \
                 f"CI smoke: page leak ({mgr.free_pages}/{mgr.num_pages} free)"
-        print("[serve] CI smoke OK (paged-cache scheduler path exercised)"
-              if mgr.kind == "paged" else "[serve] CI smoke OK")
+        if args.megatick > 1:
+            # token parity: the fused K-tick while_loop + async pipeline
+            # must emit exactly what the per-tick host-synced loop emits
+            ref_engine, ref_done, _ = run_engine(1)
+            got = {r.uid: r.output for r in done}
+            ref = {r.uid: r.output for r in ref_done}
+            assert got == ref, \
+                f"CI smoke: megatick={args.megatick} tokens diverge from " \
+                "megatick=1"
+            ref_mgr = ref_engine.session.cache_mgr
+            if ref_mgr.kind == "paged":
+                assert ref_mgr.free_pages == ref_mgr.num_pages, \
+                    "CI smoke: page leak in the megatick=1 reference"
+            print(f"[serve] CI smoke OK (megatick={args.megatick} "
+                  "token-parity with megatick=1)")
+        else:
+            print("[serve] CI smoke OK (paged-cache scheduler path "
+                  "exercised)" if mgr.kind == "paged"
+                  else "[serve] CI smoke OK")
     for r in done:
         line = (f"  req {r.uid}: {len(r.output)} tokens "
                 f"exits={sum(1 for e in r.exit_points if e < model.num_exit_points)}")

@@ -30,6 +30,17 @@ pin the reference path. Sampling modes come from ``run.serve`` (greedy /
 temperature) on the dense strategy; ``prng_seed`` seeds the session's PRNG
 stream so sampled runs are reproducible per seed.
 
+Device-resident multi-tick decode (PR 5, DESIGN.md §6): ``megatick=K`` folds
+K decode ticks into one fused ``lax.while_loop`` dispatch (budget/EOS/done
+accounting in the jitted carry — host sync once per K tokens instead of once
+per token), and ``async_ticks`` (default ON when K > 1) pipelines the loop:
+``step()`` dispatches megatick N+1 BEFORE blocking on megatick N's results,
+so host-side detokenization, retirement, and chunked admission overlap
+device compute. The pipeline is correct because the done mask rides in the
+device carry (a megatick dispatched against rows that just finished runs
+zero device ticks), at the cost of results and admissions lagging one
+``step()`` call — ``run_to_completion`` drains the in-flight handle.
+
 This engine is the PC/cloud *logic* deliverable; the multi-pod path lowers
 the same strategy step through pjit (launch/serve.py, launch/dryrun.py).
 """
@@ -68,7 +79,9 @@ class ServingEngine:
                  prng_seed: int = 0, fused_gate: bool = True,
                  cache: Union[None, str, CacheSpec] = "paged",
                  page_size: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 megatick: int = 1,
+                 async_ticks: Optional[bool] = None):
         spec = CacheSpec.resolve(cache, model.run.serve)
         if page_size is not None:
             # the override obeys the same rule ServeConfig validates at
@@ -117,6 +130,15 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * B
         self._inflight: Dict[int, Request] = {}
         self._uid = itertools.count()
+        if megatick < 1:
+            raise ValueError(f"megatick must be >= 1, got {megatick}")
+        self.megatick = int(megatick)
+        # pipelined ticks default ON whenever megaticks are on: the whole
+        # point of folding K ticks into one dispatch is to overlap the
+        # host work with device compute
+        self.async_ticks = (self.megatick > 1 if async_ticks is None
+                            else bool(async_ticks))
+        self._handle = None             # in-flight async megatick
 
     # ----- request intake -----
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
@@ -144,12 +166,57 @@ class ServingEngine:
         self.slots[row] = None
         self.session.retire_row(row)    # compaction: free pages, zero span
 
+    def _collect(self, res, slots: List[Optional[Request]],
+                 finished: List[Request]) -> None:
+        """Fold one (possibly multi-tick) StepResult into the requests that
+        occupied the slots WHEN THE MEGATICK WAS DISPATCHED: detokenize,
+        per-tick exit stats, retire + compact. The snapshot matters in the
+        async pipeline — a slot can be re-admitted between a megatick's
+        dispatch and its finish, and the old result must not be attributed
+        to (or retire) the new occupant. A request already retired by an
+        earlier finish is skipped (later megaticks report it done again but
+        emit nothing for it — the device done-mask guarantees counts 0)."""
+        for slot in range(self.B):
+            req = slots[slot]
+            if req is None or req.done:
+                continue
+            req.output.extend(res.row_tokens(slot))
+            req.exit_points.extend(res.row_exit_points(slot))
+            req.accept_lens.extend(res.row_accept_lens(slot))
+            if res.done[slot]:
+                # req not done => its slot has not been re-admitted (slots
+                # only free at retirement), so slots[slot] is still req
+                self._retire(slot, req, finished)
+
+    def _dispatch(self):
+        """Dispatch one megatick (plus the slot snapshot its results will be
+        attributed to) if any row may still be live. The host view can trail
+        the device by one in-flight megatick, but only toward liveness (rows
+        never un-finish between admissions), so a stale dispatch at worst
+        runs zero device ticks."""
+        if np.any(self.session.live_rows()):
+            return self.session.step_async(self.megatick), list(self.slots)
+        return None
+
     # ----- one batched engine tick -----
     def step(self) -> List[Request]:
         """Scheduled admission (≤ one prefill chunk while decode is live),
-        one strategy step for all live slots, retire + compact finished.
-        Returns the list of requests completed this tick."""
+        one strategy megatick for all live slots, retire + compact finished.
+        Returns the list of requests completed this call.
+
+        With ``async_ticks`` the call is one pipeline stage: megatick N+1 is
+        dispatched BEFORE megatick N's results are read, so the host work
+        below (detokenization, retirement, chunked admission) overlaps device
+        compute; results consequently arrive one call later than they did on
+        the blocking path."""
         finished: List[Request] = []
+        prev, self._handle = self._handle, None
+        if prev is not None:
+            # overlap: next megatick goes out before we block on this one
+            self._handle = self._dispatch()
+            handle, slots_at_dispatch = prev
+            self._collect(self.session.finish_step(handle),
+                          slots_at_dispatch, finished)
         live = bool(np.any(self.session.live_rows()))
         free = [s for s in range(self.B) if self.slots[s] is None]
         for ev in self.scheduler.tick(free, live_decode=live):
@@ -160,25 +227,32 @@ class ServingEngine:
                 self._retire(ev.row, req, finished)
             else:
                 self.slots[ev.row] = req
-        if not np.any(self.session.live_rows()):
-            return finished
-        res = self.session.step()
-        for slot in range(self.B):
-            req = self.slots[slot]
-            if req is None:
-                continue
-            req.output.extend(res.row_tokens(slot))
-            req.exit_points.append(int(res.exit_layer[slot]))
-            req.accept_lens.append(int(res.accept_len[slot]))
-            if res.done[slot]:
-                self._retire(slot, req, finished)
+        if self._handle is None:
+            if not np.any(self.session.live_rows()):
+                return finished
+            if self.async_ticks:
+                self._handle = self._dispatch()
+            else:
+                self._collect(self.session.step(num_ticks=self.megatick),
+                              self.slots, finished)
         return finished
+
+    @property
+    def in_flight(self) -> bool:
+        """An async megatick is dispatched but its results are unread."""
+        return self._handle is not None
+
+    @property
+    def busy(self) -> bool:
+        """Work outstanding: queued/in-flight admission, live decode rows,
+        or an in-flight async megatick awaiting its results."""
+        return (self._handle is not None or self.scheduler.has_work()
+                or bool(np.any(self.session.live_rows())))
 
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if (not self.scheduler.has_work()
-                    and not np.any(self.session.live_rows())):
+            if not self.busy:
                 break
         return done

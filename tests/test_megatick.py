@@ -1,0 +1,267 @@
+"""Device-resident multi-tick decode (megatick) tests: token parity of
+``step(num_ticks=K)`` vs K single steps across all three strategies × both
+cache layouts (mid-megatick EOS and budget exhaustion included), buffer
+donation safety, the widened StepResult contract, and the async serving
+pipeline's end-to-end parity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DenseStrategy, Engine, SpecEEStrategy, TreeStrategy)
+from repro.configs import get_config
+from repro.core import engine as eng
+from repro.core.tree import TreeSpec
+from repro.models.model import build_model
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    run = get_config("llama2-7b").smoke()
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    sw = eng.init_specee(m, jax.random.PRNGKey(1))
+    return run, m, params, sw
+
+
+def _prompts(run, B=2, T=8, seed=4):
+    return jax.random.randint(jax.random.PRNGKey(seed), (B, T), 0,
+                              run.model.vocab_size)
+
+
+def _strategy(name):
+    return {"dense": DenseStrategy(),
+            "specee": SpecEEStrategy(),
+            "tree": TreeStrategy(tree=TreeSpec(depth=2, branch=3))}[name]
+
+
+def _drain_single(session, first):
+    toks = [first.row_tokens(b) for b in range(first.batch)]
+    stats = [[] for _ in range(first.batch)]
+    while not session.all_done():
+        res = session.step()
+        for b in range(res.batch):
+            toks[b].extend(res.row_tokens(b))
+            stats[b].extend(res.row_exit_points(b))
+    return toks, stats
+
+
+def _drain_mega(session, first, K):
+    toks = [first.row_tokens(b) for b in range(first.batch)]
+    stats = [[] for _ in range(first.batch)]
+    while not session.all_done():
+        res = session.step(num_ticks=K)
+        assert res.is_megatick and int(res.ticks) <= K
+        for b in range(res.batch):
+            toks[b].extend(res.row_tokens(b))
+            stats[b].extend(res.row_exit_points(b))
+    return toks, stats
+
+
+# ---------------- token parity: one megatick == K single steps ----------------
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("strategy", ["dense", "specee", "tree"])
+def test_megatick_token_parity(setup, strategy, cache):
+    """``step(num_ticks=K)`` is token-identical to K single ``step()`` calls
+    for every strategy on both cache layouts — budget exhaustion lands
+    mid-megatick (budget 8, K=3) so the device-side clip is exercised."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, seed=11)
+    e = Engine.create(m, params, sw, strategy=_strategy(strategy))
+    s1 = e.new_session(cache=cache)
+    ref, ref_stats = _drain_single(s1, s1.prefill(prompts, max_new_tokens=8))
+    s2 = e.new_session(cache=cache)
+    got, got_stats = _drain_mega(s2, s2.prefill(prompts, max_new_tokens=8), 3)
+    assert got == ref
+    assert got_stats == ref_stats          # per-tick exit stats survive fusion
+    assert all(len(t) == 8 for t in got)
+
+
+@pytest.mark.parametrize("strategy", ["specee", "tree"])
+def test_megatick_eos_mid_flight(setup, strategy):
+    """A row hitting EOS inside a megatick truncates exactly where the
+    host-accounted loop truncates, and the done mask carries on device (the
+    row emits nothing for the rest of the megatick)."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, seed=12)
+    e = Engine.create(m, params, sw, strategy=_strategy(strategy))
+    s = e.new_session()
+    ref, _ = _drain_single(s, s.prefill(prompts, max_new_tokens=10))
+    # an EOS that fires mid-stream for row 0 (position 4 of its output)
+    eos = ref[0][4]
+    s1 = e.new_session()
+    want, _ = _drain_single(
+        s1, s1.prefill(prompts, max_new_tokens=10, eos_token=eos))
+    s2 = e.new_session()
+    got, _ = _drain_mega(
+        s2, s2.prefill(prompts, max_new_tokens=10, eos_token=eos), 4)
+    assert got == want
+    assert got[0] == ref[0][:ref[0].index(eos) + 1]
+
+
+def test_megatick_result_contract(setup):
+    """The widened StepResult: (B, K·W) tokens, (B, K) per-tick stat planes,
+    tick_counts summing to counts, tick_live consistent with ticks run."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, seed=13)
+    K = 4
+    strat = TreeStrategy(tree=TreeSpec(depth=2, branch=3))
+    e = Engine.create(m, params, sw, strategy=strat)
+    s = e.new_session()
+    s.prefill(prompts, max_new_tokens=16)
+    res = s.step(num_ticks=K)
+    B, W = 2, e.emit_width
+    assert res.tokens.shape == (B, K * W)
+    assert res.counts.shape == (B,)
+    assert res.exit_layer.shape == (B, K)
+    assert res.accept_len.shape == (B, K)
+    assert res.exited.shape == (B, K)
+    assert res.tick_counts.shape == (B, K)
+    assert res.tick_live.shape == (B, K)
+    assert 1 <= int(res.ticks) <= K
+    np.testing.assert_array_equal(res.tick_counts.sum(axis=1), res.counts)
+    # ticks beyond the early exit are not live for anyone
+    for t in range(int(res.ticks), K):
+        assert not res.tick_live[:, t].any()
+
+
+# ---------------- buffer donation ----------------
+def test_donation_no_alias_corruption(setup):
+    """The step jits donate the decode state (KV cache included): a cache
+    reference retained across a step must either fail LOUDLY on read
+    (buffer donated and deleted) or still hold the pre-step values (backend
+    ignored the donation) — silent aliasing corruption is the one outcome
+    that must never happen."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, seed=14)
+    e = Engine.create(m, params, sw, strategy="specee")
+    s = e.new_session()
+    s.prefill(prompts, max_new_tokens=6)
+    retained = jax.tree_util.tree_leaves(s._state.cache)
+    snapshot = [np.asarray(x).copy() for x in retained]
+    s.step()
+    deleted = 0
+    for leaf, snap in zip(retained, snapshot):
+        try:
+            now = np.asarray(leaf)
+        except RuntimeError:
+            deleted += 1            # donated and deleted: loud, safe
+            continue
+        np.testing.assert_array_equal(now, snap)
+    # the session's CURRENT state stays readable either way
+    assert np.asarray(s._state.cache["len"]).min() >= 0
+    # the megatick jit donates too: same loud-or-unchanged contract
+    s2 = e.new_session()
+    s2.prefill(prompts, max_new_tokens=6)
+    retained2 = jax.tree_util.tree_leaves(s2._state.cache)
+    snapshot2 = [np.asarray(x).copy() for x in retained2]
+    s2.step(num_ticks=2)
+    for leaf, snap in zip(retained2, snapshot2):
+        try:
+            now = np.asarray(leaf)
+        except RuntimeError:
+            continue                # donated and deleted: loud, safe
+        np.testing.assert_array_equal(now, snap)
+    assert np.asarray(s2._state.cache["len"]).min() >= 0
+
+
+def test_retained_cache_unaffected_by_megatick_manager(setup):
+    """KVCacheManager host bookkeeping (free pages, row pages) stays
+    coherent when stepping through megaticks with retirement in between."""
+    run, m, params, sw = setup
+    e = Engine.create(m, params, sw, strategy="specee")
+    s = e.new_session(batch=2, cache="paged")
+    mgr = s.cache_mgr
+    free0 = mgr.free_pages
+    s.prefill_row(0, np.asarray(_prompts(run, seed=15))[0],
+                  max_new_tokens=4)
+    assert mgr.free_pages < free0
+    while not s.all_done():
+        s.step(num_ticks=2)
+    s.retire_row(0)
+    assert mgr.free_pages == free0
+    # a megatick after retirement keeps the retired row's span pinned at 0
+    s.prefill_row(1, np.asarray(_prompts(run, seed=16))[1],
+                  max_new_tokens=3)
+    while not s.all_done():
+        s.step(num_ticks=2)
+    assert s.row_span(0) == 0
+
+
+# ---------------- async pipeline ----------------
+def test_finish_step_preserves_readmitted_row(setup):
+    """Host bookkeeping edited between a megatick's dispatch and its finish
+    (retire + re-admit of a slot) must survive the finish's host sync — the
+    dispatch-time carry predates the edit, so syncing it wholesale would
+    mark the NEW occupant done with the OLD occupant's emitted count."""
+    run, m, params, sw = setup
+    e = Engine.create(m, params, sw, strategy="specee")
+    s = e.new_session(batch=2, cache="paged")
+    p = np.asarray(_prompts(run, seed=19))
+    s.prefill_row(0, p[0], max_new_tokens=2)
+    s.prefill_row(1, p[1], max_new_tokens=8)
+    h1 = s.step_async(4)            # row 0 exhausts its budget mid-megatick
+    h2 = s.step_async(4)            # dispatched before h1 is read
+    r1 = s.finish_step(h1)
+    assert r1.done[0]
+    s.retire_row(0)
+    s.prefill_row(0, p[0], max_new_tokens=8)   # re-admit: h2 still in flight
+    assert not s._done[0]
+    s.finish_step(h2)               # h2's carry predates the re-admission
+    assert not s._done[0], "finish rolled a re-admitted row back to done"
+    assert s._emitted[0] <= 1, "re-admitted row inherited old emitted count"
+    assert not s.all_done()
+    while not s.all_done():         # and the new occupant decodes to budget
+        s.step(num_ticks=4)
+    assert s._emitted[0] == 8
+
+
+def test_step_async_pipeline_parity(setup):
+    """Two megaticks dispatched back-to-back (N+1 before N's results are
+    read) emit exactly what two synchronous megaticks emit — the
+    device-resident carry makes dispatch-ahead safe."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, seed=17)
+    e = Engine.create(m, params, sw, strategy="specee")
+    s1 = e.new_session()
+    s1.prefill(prompts, max_new_tokens=9)
+    sync = []
+    while not s1.all_done():
+        res = s1.step(num_ticks=2)
+        sync.append([res.row_tokens(b) for b in range(2)])
+    s2 = e.new_session()
+    s2.prefill(prompts, max_new_tokens=9)
+    h1 = s2.step_async(2)
+    h2 = s2.step_async(2)           # dispatched before h1 is read
+    r1, r2 = s2.finish_step(h1), s2.finish_step(h2)
+    assert [r1.row_tokens(b) for b in range(2)] == sync[0]
+    assert [r2.row_tokens(b) for b in range(2)] == sync[1]
+    # out-of-order finish is rejected loudly
+    h3 = s2.step_async(2)
+    h4 = s2.step_async(2)
+    with pytest.raises(AssertionError):
+        s2.finish_step(h4)
+    s2.finish_step(h3)
+    s2.finish_step(h4)
+
+
+@pytest.mark.parametrize("strategy", ["specee", "tree"])
+def test_serving_megatick_matches_blocking(setup, strategy):
+    """End-to-end serving parity: megatick-K async-pipelined engine emits
+    the same per-request tokens as the historical per-tick blocking engine,
+    across retire + re-admit waves, with zero page leak."""
+    run, m, params, sw = setup
+    rng = np.random.default_rng(18)
+    prompts = [rng.integers(0, run.model.vocab_size,
+                            int(rng.integers(4, 10))) for _ in range(4)]
+    outs = {}
+    for megatick in (1, 4):
+        se = ServingEngine(m, params, sw, strategy=_strategy(strategy),
+                           megatick=megatick)
+        reqs = [se.submit(p, max_new_tokens=6) for p in prompts]
+        se.run_to_completion()
+        assert all(r.done and len(r.output) == 6 for r in reqs)
+        outs[megatick] = [r.output for r in reqs]
+        mgr = se.session.cache_mgr
+        assert mgr.free_pages == mgr.num_pages, "page leak under megatick"
+    assert outs[4] == outs[1]

@@ -39,4 +39,39 @@ if [ "$#" -eq 0 ]; then
   echo "[ci] launch/serve.py --ci --megatick 8 (megatick smoke)"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --ci --megatick 8
+
+  # kill/restore smoke: SIGTERM a serving run mid-decode (the engine drains
+  # the in-flight megatick, saves a step-atomic checkpoint, exits 17), then
+  # restart with --restore — --ci asserts the resumed run completes every
+  # request token-identical to a fault-free reference with zero page leak.
+  # If the run wins the race and finishes before the signal (rc 0), the
+  # restore run finds an empty checkpoint dir and serves fresh — the same
+  # asserts still hold.
+  echo "[ci] launch/serve.py kill/restore smoke (SIGTERM mid-decode)"
+  CKPT_DIR="$(mktemp -d)"
+  trap 'rm -rf "$CKPT_DIR"' EXIT
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --megatick 4 \
+      --checkpoint-dir "$CKPT_DIR" >/dev/null 2>&1 &
+  SERVE_PID=$!
+  sleep 8
+  kill -TERM "$SERVE_PID" 2>/dev/null || true
+  RC=0; wait "$SERVE_PID" || RC=$?
+  if [ "$RC" -ne 17 ] && [ "$RC" -ne 0 ]; then
+    echo "[ci] kill/restore smoke: serve exited rc=$RC (want 17 or 0)" >&2
+    exit 1
+  fi
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --megatick 4 \
+      --checkpoint-dir "$CKPT_DIR" --restore
+
+  # fault-injection sweep: each named site fires once (deterministic
+  # schedule); --ci asserts every request still completes token-identical
+  # to the fault-free reference and the pool leaks nothing. The sigterm
+  # site preempts + restores in-process.
+  for SITE in dispatch finish_timeout nan_logits pool_exhausted sigterm; do
+    echo "[ci] launch/serve.py --ci --inject $SITE (fault-injection sweep)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python -m repro.launch.serve --ci --megatick 4 --inject "$SITE"
+  done
 fi

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.config import ATTN, LOCAL_ATTN
 from repro.core import paged as paged_lib
+from repro.runtime import faultinject
 
 
 @dataclass(frozen=True)
@@ -134,7 +135,30 @@ class KVCacheManager:
         raise NotImplementedError
 
     def can_admit(self, prompt_len: int = 0) -> bool:
+        """Admission gate. The ``pool_exhausted`` fault-injection site lives
+        here so a seeded schedule can simulate a dry pool on any layout —
+        driving the serving engine's victim-eviction path deterministically
+        (repro.runtime.faultinject)."""
+        if faultinject.fire("pool_exhausted"):
+            return False
+        return self._can_admit(prompt_len)
+
+    def _can_admit(self, prompt_len: int = 0) -> bool:
         return True
+
+    # ----- checkpoint / restore (DESIGN.md §7) -----
+    def export_state(self) -> dict:
+        """Host-side allocator state for a session snapshot (the device
+        arrays — pools, page table — travel in the DecodeState pytree)."""
+        return {"kind": self.kind}
+
+    def import_state(self, st: dict) -> None:
+        """Adopt a snapshot's allocator state. The manager must have been
+        built with the same layout the snapshot was taken under."""
+        if st.get("kind") != self.kind:
+            raise ValueError(
+                f"cache snapshot is {st.get('kind')!r}, manager is "
+                f"{self.kind!r} — restore needs the same cache layout")
 
     # ----- introspection (tests / benchmarks) -----
     def row_span(self, cache: Any, row: int) -> int:
@@ -208,8 +232,25 @@ class PagedKVCache(KVCacheManager):
     def row_pages(self, row: int) -> int:
         return len(self._row_pages[row])
 
-    def can_admit(self, prompt_len: int = 0) -> bool:
+    def _can_admit(self, prompt_len: int = 0) -> bool:
         return len(self._free) >= self.pages_per_row
+
+    def export_state(self) -> dict:
+        return {"kind": self.kind, "page_size": self.page_size,
+                "num_pages": self.num_pages,
+                "free": [int(p) for p in self._free],
+                "row_pages": [[int(p) for p in r] for r in self._row_pages]}
+
+    def import_state(self, st: dict) -> None:
+        super().import_state(st)
+        if (st["page_size"] != self.page_size
+                or st["num_pages"] != self.num_pages):
+            raise ValueError(
+                f"paged snapshot geometry (page_size={st['page_size']}, "
+                f"num_pages={st['num_pages']}) does not match manager "
+                f"(page_size={self.page_size}, num_pages={self.num_pages})")
+        self._free = [int(p) for p in st["free"]]
+        self._row_pages = [[int(p) for p in r] for r in st["row_pages"]]
 
     # ----- layout -----
     def empty_cache(self) -> Any:

@@ -59,6 +59,10 @@ class ChunkedPrefillScheduler:
         self.queue: Deque[_Pending] = deque()
         self._active: Optional[Tuple[int, Admission]] = None
         self.last_tick_tokens = 0       # prefill tokens run by the last tick
+        # consecutive ticks the queue head sat blocked on ``can_admit`` while
+        # a free slot was available — the serving engine's pool-pressure
+        # signal (``>= evict_patience`` triggers victim eviction, DESIGN §7)
+        self.deferred_ticks = 0
 
     # ----- intake -----
     def submit(self, uid: int, prompt, max_new_tokens: Optional[int] = None,
@@ -98,12 +102,14 @@ class ChunkedPrefillScheduler:
         events: List[Admitted] = []
         free = [r for r in free_rows if r not in self.busy_rows()]
         self.last_tick_tokens = 0
+        deferred = False
         while True:
             if self._active is None:
                 if not self.queue or not free:
                     break
                 head = self.queue[0]
                 if not self.session.can_admit(len(head.prompt)):
+                    deferred = True
                     break               # paged pool full: defer admission
                 self.queue.popleft()
                 row = free.pop(0)
@@ -120,4 +126,26 @@ class ChunkedPrefillScheduler:
                 self._active = None
             if live_decode and self.chunk_tokens is not None:
                 break                   # one chunk per live tick, max
+        # pressure signal: stuck means a slot was free but the pool refused
+        # the head AND nothing else was admitted this tick (an admission
+        # elsewhere is forward progress, so the counter restarts)
+        if deferred and not events:
+            self.deferred_ticks += 1
+        else:
+            self.deferred_ticks = 0
         return events
+
+    def abort_active(self) -> Optional[int]:
+        """Abort the in-flight chunked admission, requeueing its request at
+        the queue FRONT (it keeps its turn). Safe at any point mid-prefill:
+        no session row or page is claimed until the admission's final chunk
+        inserts the row, so the partial prefill work is simply dropped and a
+        later tick (possibly in a restored process) re-runs it from scratch.
+        Returns the requeued uid, or None if nothing was in flight."""
+        if self._active is None:
+            return None
+        uid, adm = self._active
+        self._active = None
+        self.queue.appendleft(_Pending(uid, np.asarray(adm.tokens),
+                                       adm.max_new_tokens, adm.eos_token))
+        return uid

@@ -54,6 +54,7 @@ from repro.core import engine as eng
 from repro.core import draft as draft_lib
 from repro.core import scheduler as sched_lib
 from repro.models.model import Model
+from repro.runtime import faultinject
 
 from repro.api.cache import (CacheSpec, KVCacheManager, insert_row_pytree,
                              make_cache_manager)
@@ -225,8 +226,13 @@ class DecodeSession:
         # empty slots count as done until a request is admitted
         self._done = np.full(batch, not live, bool)
         # rows compacted by retire_row: their logical length is pinned to 0
-        # after every tick (the batched step advances len uniformly)
-        self._retired: set = set()
+        # after every tick (the batched step advances len uniformly).
+        # Never-admitted slots start retired too — without the pin their
+        # cache["len"] creeps up every tick until it saturates the row's
+        # paged capacity, and the degenerate attention at saturation
+        # perturbs live rows through the batch-shared kernels (which breaks
+        # the row-local determinism that eviction replay relies on)
+        self._retired: set = set() if live else set(range(batch))
         self._dev_carry = None
 
     # ----- device-side decode-limit carry (megatick path) -----
@@ -349,6 +355,88 @@ class DecodeSession:
         """Attention span the row currently pays (tests/benchmarks)."""
         assert self._state is not None and self.cache_mgr is not None
         return self.cache_mgr.row_span(self._state.cache, row)
+
+    # ----- checkpoint / restore / fault recovery (DESIGN.md §7) -----
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-unread async megaticks outstanding."""
+        return len(self._async_handles)
+
+    def abort_async(self) -> None:
+        """Forget every dispatched-but-unread megatick (watchdog recovery).
+
+        The host mirrors stay at their last *synced* values — which are
+        authoritative precisely because the aborted megaticks' results were
+        never read — and the device-limit carry is dropped, so the next
+        dispatch rebuilds it from the host. ``self._state`` keeps pointing
+        at the (still materializing) output buffers of the last dispatch;
+        callers that suspect those values are poisoned must evict the
+        affected rows, whose recompute replay rebuilds them from scratch.
+        """
+        self._async_handles.clear()
+        self._dev_carry = None
+
+    def snapshot(self) -> tuple:
+        """-> ``(state_tree, meta)``: the full decode state of this session.
+
+        ``state_tree`` is the device ``DecodeState`` pytree (KV pools + page
+        table + draft cache + scheduler state + PRNG — everything the jitted
+        step consumes); ``meta`` is a JSON-serializable dict of the host-side
+        bookkeeping (budgets/emitted/eos/done/retired mirrors plus the cache
+        manager's allocator state). Together they are sufficient for
+        ``restore`` to resume decode token-identically. The caller must
+        finish (or abort) outstanding async megaticks first — a snapshot
+        straddling an unread dispatch would capture host mirrors that trail
+        the device state.
+        """
+        assert self._state is not None and self.batch is not None, \
+            "nothing to snapshot: session has no state"
+        assert not self._async_handles, \
+            "finish_step()/abort_async() outstanding megaticks before " \
+            "snapshot()"
+        meta = {
+            "batch": int(self.batch),
+            "max_seq": int(self._max_seq),
+            "strategy": self.engine.strategy.name,
+            "emitted": [int(x) for x in self._emitted],
+            "budget": [None if int(b) >= _NO_BUDGET else int(b)
+                       for b in self._budget],
+            "eos": [None if e is None else int(e) for e in self._eos],
+            "done": [bool(d) for d in self._done],
+            "retired": sorted(int(r) for r in self._retired),
+            "cache": self.cache_mgr.export_state(),
+        }
+        return self._state, meta
+
+    def restore(self, state_tree, meta: dict) -> None:
+        """Adopt a ``snapshot`` into THIS pre-allocated session.
+
+        The session must have been built the same way as the one that
+        snapshotted (same batch / max_seq / strategy / cache layout) —
+        validated here before anything is touched. After restore the next
+        ``step``/``step_async`` continues exactly where the saved session
+        stopped (decode is deterministic: greedy argmax, and sampling keys
+        derive from state that travels in the snapshot).
+        """
+        assert self._state is not None and self.batch is not None, \
+            "restore needs a pre-allocated session (new_session(batch=B))"
+        for key, have in (("batch", self.batch), ("max_seq", self._max_seq),
+                          ("strategy", self.engine.strategy.name)):
+            if meta[key] != have:
+                raise ValueError(
+                    f"snapshot {key}={meta[key]!r} does not match this "
+                    f"session's {key}={have!r}")
+        self.cache_mgr.import_state(meta["cache"])
+        self._state = jax.tree_util.tree_map(jnp.asarray, state_tree)
+        self._emitted = np.asarray(meta["emitted"], np.int64)
+        self._budget = np.asarray(
+            [_NO_BUDGET if b is None else int(b) for b in meta["budget"]],
+            np.int64)
+        self._eos = [None if e is None else int(e) for e in meta["eos"]]
+        self._done = np.asarray(meta["done"], bool)
+        self._retired = set(int(r) for r in meta["retired"])
+        self._dev_carry = None
+        self._async_handles = []
 
     # ----- whole-batch entry -----
     def prefill(self, prompts, max_new_tokens: Optional[int] = None,
@@ -534,6 +622,9 @@ class DecodeSession:
             "async megaticks are in flight; finish_step() them first"
         if num_ticks is None or int(num_ticks) == 1:
             e = self.engine
+            # fault-injection site: fires BEFORE the donating jit call, so
+            # the decode state is untouched and the caller may retry
+            faultinject.check("dispatch")
             raw, self._state = e._step_jit(e.params, e.sw, self._state)
             if self._retired:
                 # compaction is sticky: the uniform len advance of the
@@ -558,6 +649,9 @@ class DecodeSession:
         K = int(num_ticks)
         assert K >= 1, f"num_ticks must be >= 1, got {K}"
         e = self.engine
+        # fault-injection site: fires BEFORE the donating jit call, so the
+        # decode state is untouched and the caller may retry the dispatch
+        faultinject.check("dispatch")
         carry = (self._dev_carry if self._dev_carry is not None
                  else self._carry_from_host())
         out, self._state, carry = e.megatick_jit(K)(e.params, e.sw,

@@ -670,15 +670,22 @@ def dense_decode_step(model: Model, params: Params,
     the LM head streams with the exit-gate impl the model's flags select, so
     the fused path stops materializing (B, V) logits here too ("ref" keeps
     the historical materialized argmax bit-for-bit). ``temperature>0``
-    samples from the full logits (sampling needs the distribution), splitting
-    ``state.prng`` each step so seeds thread through the serving engine.
+    samples from the full logits (sampling needs the distribution) with a
+    per-row key derived from (session key, row position, previous token) —
+    ``sampler.row_keys`` — so a row's samples are a pure function of its own
+    decode history: batch- and slot-independent, megatick-invariant, and
+    exactly reproducible when an evicted row replays its prefix through the
+    fault-recovery path (DESIGN.md §7). ``state.prng`` stays constant.
     """
+    pos_before = state.cache["len"]
     h, cache = model.decode_step_hidden(params, state.last_token, state.cache)
     if temperature > 0.0:
-        from repro.serving.sampler import sample
-        prng, sub = jax.random.split(state.prng)
+        from repro.serving.sampler import row_keys, sample_rows
+        keys = row_keys(state.prng, pos_before, state.last_token)
         logits = model.logits(params, h)
-        token = sample(logits, sub, temperature=temperature, top_k=top_k)
+        token = sample_rows(logits, keys, temperature=temperature,
+                            top_k=top_k)
+        prng = state.prng
     else:
         prng = state.prng
         gate_impl, _ = _gate_impls(model)

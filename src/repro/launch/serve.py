@@ -6,6 +6,18 @@ Smoke usage (CPU):
         --requests 8
     PYTHONPATH=src python -m repro.launch.serve --mode tree --requests 4
 
+Fault tolerance (DESIGN.md §7):
+    --checkpoint-dir D   arm SIGTERM preemption: the engine drains, saves a
+                         step-atomic snapshot into D, and exits with code 17
+    --restore            resume the latest snapshot in D token-identically
+    --inject SITE        deterministic fault injection at one named site
+                         (dispatch / finish_timeout / nan_logits /
+                         pool_exhausted / sigterm) — the run must still
+                         complete every request, and --ci verifies the
+                         outputs against an in-process fault-free reference
+    --num-pages N        oversubscribe the paged pool (fewer pages than
+                         max_batch rows need) to drive victim eviction
+
 The serving engine defaults the fused exit-gate pipeline ON
 (serve-path adoption; pass --no-fused-gate to pin the reference path).
 The full-scale path is the same strategy step jit'd against the production
@@ -15,13 +27,19 @@ assigned architecture × decode shape).
 from __future__ import annotations
 
 import argparse
+import sys
+import tempfile
 import time
 
 import jax
 import numpy as np
 
+PREEMPTED_EXIT_CODE = 17
+
 
 def main() -> None:
+    from repro.runtime import faultinject
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -39,6 +57,10 @@ def main() -> None:
                          "slot-masked reference)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="paged-KV page size (default: ServeConfig.page_size)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged-KV pool size in pages (default: capacity "
+                         "parity with dense; smaller oversubscribes the "
+                         "pool and exercises victim eviction)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="Sarathi-style chunked-prefill budget per tick "
                          "(0 = blocking admission; default: "
@@ -51,8 +73,21 @@ def main() -> None:
     ap.add_argument("--sync-ticks", action="store_true",
                     help="disable the async serving pipeline even with "
                          "--megatick > 1")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="arm SIGTERM preemption: drain + snapshot here, "
+                         f"exit {PREEMPTED_EXIT_CODE}; restart with "
+                         "--restore to resume")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume the latest checkpoint in --checkpoint-dir "
+                         "(no-op on an empty directory)")
+    ap.add_argument("--inject", default=None,
+                    choices=list(faultinject.SITES),
+                    help="deterministically inject one fault at the named "
+                         "site; the run must still complete (recovery path)")
     ap.add_argument("--ci", action="store_true",
                     help="CI smoke: few short requests + completion asserts")
+    ap.add_argument("--ticks-per-check", type=int, default=1,
+                    help="(reserved) serving ticks between health checks")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for --mode dense "
                          "(0 = greedy)")
@@ -65,11 +100,29 @@ def main() -> None:
     if args.ci:
         args.requests = min(args.requests, 4)
         args.max_new = min(args.max_new, 6)
+    if args.restore and not args.checkpoint_dir:
+        ap.error("--restore requires --checkpoint-dir")
+    if args.inject == "sigterm" and not args.checkpoint_dir:
+        # the injected preemption is recovered in-process, which needs
+        # somewhere to put the checkpoint
+        args.checkpoint_dir = tempfile.mkdtemp(prefix="serve-ckpt-")
 
+    # arm SIGTERM before the heavy startup (jax import + model build +
+    # tracing can run for minutes): a preemption landing mid-build must
+    # defer to the first serve tick — which drains, saves, and exits
+    # cleanly — not kill the process with the default handler
+    guard = None
+    if args.checkpoint_dir:
+        from repro.runtime.fault import PreemptionGuard
+        guard = PreemptionGuard()
+        guard.install()
+
+    from repro.api import CacheSpec
     from repro.configs import get_config
     from repro.core import engine as eng
     from repro.models.model import build_model
-    from repro.serving import ServingEngine
+    from repro.runtime.faultinject import FaultSchedule
+    from repro.serving import Preempted, ServingEngine
 
     if args.trained:
         from benchmarks.common import get_bundle
@@ -89,26 +142,73 @@ def main() -> None:
                      "verification is argmax-defined; see ROADMAP)")
         from repro.api import DenseStrategy
         strategy = DenseStrategy(temperature=args.temperature)
+    cache = args.cache
+    if args.num_pages is not None:
+        if args.cache != "paged":
+            ap.error("--num-pages requires --cache paged")
+        cache = CacheSpec(kind="paged",
+                          page_size=(args.page_size if args.page_size
+                                     else run.serve.page_size),
+                          num_pages=args.num_pages)
+    # prompts are a pure function of the CLI, so a restarted --restore run
+    # (and the in-process parity reference) regenerates the same workload
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, run.model.vocab_size,
                             int(rng.integers(4, 16)))
                for _ in range(args.requests)]
 
-    def run_engine(megatick: int):
-        engine = ServingEngine(model, params, sw, strategy=strategy,
-                               prng_seed=args.seed,
-                               fused_gate=not args.no_fused_gate,
-                               cache=args.cache, page_size=args.page_size,
-                               prefill_chunk=args.prefill_chunk,
-                               megatick=megatick,
-                               async_ticks=False if args.sync_ticks else None)
-        for p in prompts:
-            engine.submit(p, max_new_tokens=args.max_new)
-        t0 = time.perf_counter()
-        done = engine.run_to_completion()
-        return engine, done, time.perf_counter() - t0
+    def make_engine(megatick: int, checkpoint_dir=None):
+        return ServingEngine(model, params, sw, strategy=strategy,
+                             prng_seed=args.seed,
+                             fused_gate=not args.no_fused_gate,
+                             cache=cache, page_size=args.page_size,
+                             prefill_chunk=args.prefill_chunk,
+                             megatick=megatick,
+                             async_ticks=False if args.sync_ticks else None,
+                             checkpoint_dir=checkpoint_dir,
+                             guard=guard if checkpoint_dir else None)
 
-    engine, done, dt = run_engine(args.megatick)
+    def run_engine(megatick: int, checkpoint_dir=None, restore=False):
+        engine = make_engine(megatick, checkpoint_dir=checkpoint_dir)
+        restored = restore and engine.restore_checkpoint()
+        if restored:
+            print(f"[serve] restored tick {engine._tick} from "
+                  f"{checkpoint_dir} ({len(engine.completed)} requests "
+                  "already complete)")
+        else:
+            for p in prompts:
+                engine.submit(p, max_new_tokens=args.max_new)
+        t0 = time.perf_counter()
+        try:
+            engine.run_to_completion()
+        except Preempted as p:
+            if args.inject == "sigterm":
+                # injected preemption: recover in-process — exactly what a
+                # restarted --restore process would do
+                print(f"[serve] {p}; recovering in-process")
+                engine.close()
+                return run_engine(megatick, checkpoint_dir=checkpoint_dir,
+                                  restore=True)
+            print(f"[serve] {p}")
+            engine.close()
+            sys.exit(PREEMPTED_EXIT_CODE)
+        engine.close()
+        return engine, time.perf_counter() - t0
+
+    schedule = None
+    if args.inject == "pool_exhausted":
+        schedule = FaultSchedule.at(pool_exhausted=range(8))
+    elif args.inject == "sigterm":
+        schedule = FaultSchedule.once("sigterm", visit=2)
+    elif args.inject is not None:
+        schedule = FaultSchedule.once(args.inject, visit=1)
+    inj = faultinject.install(schedule) if schedule else None
+
+    engine, dt = run_engine(args.megatick,
+                            checkpoint_dir=args.checkpoint_dir,
+                            restore=args.restore)
+    faultinject.uninstall()
+    done = engine.completed
     toks = sum(len(r.output) for r in done)
     mgr = engine.session.cache_mgr
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
@@ -116,6 +216,13 @@ def main() -> None:
           f"chunk={engine.scheduler.chunk_tokens}, "
           f"megatick={args.megatick}, async={engine.async_ticks}, "
           f"fused_gate={not args.no_fused_gate})")
+    if inj is not None:
+        assert args.inject in inj.fired_sites(), \
+            f"--inject {args.inject} never fired (schedule {schedule.plan})"
+        recovery = [(e.site, e.action) for e in engine.fault_log]
+        print(f"[serve] injected {args.inject} at visits "
+              f"{sorted(inj.schedule.plan[args.inject])}; recovery log: "
+              f"{recovery}")
     if args.ci:
         assert len(done) == args.requests, \
             f"CI smoke: {len(done)}/{args.requests} requests completed"
@@ -124,21 +231,24 @@ def main() -> None:
         if mgr.kind == "paged":
             assert mgr.free_pages == mgr.num_pages, \
                 f"CI smoke: page leak ({mgr.free_pages}/{mgr.num_pages} free)"
-        if args.megatick > 1:
-            # token parity: the fused K-tick while_loop + async pipeline
-            # must emit exactly what the per-tick host-synced loop emits
-            ref_engine, ref_done, _ = run_engine(1)
+        # token parity: restored, fault-injected, eviction-pressured, and
+        # fused/pipelined runs must all emit exactly what the plain
+        # per-tick fault-free loop emits
+        need_ref = (args.megatick > 1 or args.restore
+                    or args.inject is not None or args.num_pages is not None)
+        if need_ref:
+            ref_engine, _ = run_engine(1)
             got = {r.uid: r.output for r in done}
-            ref = {r.uid: r.output for r in ref_done}
+            ref = {r.uid: r.output for r in ref_engine.completed}
             assert got == ref, \
-                f"CI smoke: megatick={args.megatick} tokens diverge from " \
-                "megatick=1"
+                "CI smoke: tokens diverge from the fault-free megatick=1 " \
+                "reference"
             ref_mgr = ref_engine.session.cache_mgr
             if ref_mgr.kind == "paged":
                 assert ref_mgr.free_pages == ref_mgr.num_pages, \
                     "CI smoke: page leak in the megatick=1 reference"
-            print(f"[serve] CI smoke OK (megatick={args.megatick} "
-                  "token-parity with megatick=1)")
+            print("[serve] CI smoke OK (token-parity with the fault-free "
+                  "megatick=1 reference)")
         else:
             print("[serve] CI smoke OK (paged-cache scheduler path "
                   "exercised)" if mgr.kind == "paged"
@@ -146,6 +256,8 @@ def main() -> None:
     for r in done:
         line = (f"  req {r.uid}: {len(r.output)} tokens "
                 f"exits={sum(1 for e in r.exit_points if e < model.num_exit_points)}")
+        if r.evictions:
+            line += f" evictions={r.evictions}"
         if mode == "tree":
             line += f" accepted={sum(r.accept_lens)}"
         print(line)

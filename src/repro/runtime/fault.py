@@ -90,18 +90,38 @@ def plan_remesh(alive_devices: int, model_parallel: int,
 
 
 class PreemptionGuard:
-    """SIGTERM → request a final checkpoint before the scheduler kills us."""
+    """SIGTERM → request a final checkpoint before the scheduler kills us.
+
+    One process can hold several guards (one per ServingEngine plus one per
+    train loop): ``install`` is idempotent per guard (repeated installs keep
+    exactly one handler instead of chaining a new wrapper each time), and
+    ``uninstall`` restores the handler that was active before this guard's
+    install, so guards nest and tear down cleanly.
+    """
 
     def __init__(self):
         self.requested = False
         self._prev = None
+        self._installed = False
 
     def install(self) -> None:
+        if self._installed:
+            return
         def handler(signum, frame):
             self.requested = True
             if callable(self._prev):
                 self._prev(signum, frame)
         self._prev = signal.signal(signal.SIGTERM, handler)
+        self._installed = True
+
+    def uninstall(self) -> None:
+        """Restore the pre-install SIGTERM handler. No-op if not installed."""
+        if not self._installed:
+            return
+        prev = self._prev if self._prev is not None else signal.SIG_DFL
+        signal.signal(signal.SIGTERM, prev)
+        self._prev = None
+        self._installed = False
 
     def should_save(self) -> bool:
         return self.requested

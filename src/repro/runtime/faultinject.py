@@ -1,0 +1,162 @@
+"""Deterministic fault injection for the serving stack.
+
+A ``FaultSchedule`` names *sites* — places in the serving path that consult
+the injector — and the visit indices at which each site should fail. Sites
+are consulted with ``fire(site)`` (count the visit, return whether to
+inject) or ``check(site)`` (raise ``InjectedFault``); an uninstalled
+injector makes every site a no-op, so production code pays one global read
+per consultation.
+
+Named sites (the serving fault surface, DESIGN.md §7):
+
+  * ``dispatch``        — a megatick dispatch raises before the jit call
+                          (pre-donation, so the engine's backoff retry is
+                          safe to re-issue against unchanged state);
+  * ``finish_timeout``  — the watchdog declares an async megatick handle
+                          wedged before its results are read (the results
+                          are lost; the engine evicts + replays);
+  * ``nan_logits``      — a megatick's emitted tokens are poisoned (the
+                          argmax of NaN logits is garbage; the engine's
+                          range validation catches it);
+  * ``pool_exhausted``  — ``KVCacheManager.can_admit`` reports a dry pool,
+                          driving the victim-eviction path;
+  * ``sigterm``         — a preemption signal lands between serving ticks
+                          (sets ``PreemptionGuard.requested``, exactly what
+                          the real SIGTERM handler does).
+
+Schedules are deterministic: explicit visit sets (``FaultSchedule.at``,
+``FaultSchedule.once``) or a seeded Bernoulli plan materialized up front
+(``FaultSchedule.seeded``) — re-running the same schedule against the same
+workload injects at exactly the same points, which is what makes the
+token-parity acceptance test meaningful.
+
+Keep this module dependency-light (stdlib + numpy): the cache manager and
+the session consult it on hot-ish host paths.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+SITES = ("dispatch", "finish_timeout", "nan_logits", "pool_exhausted",
+         "sigterm")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``check`` at a firing site. Carries the site + visit so
+    recovery code can branch on where the (synthetic) failure happened."""
+
+    def __init__(self, site: str, visit: int):
+        super().__init__(f"injected fault at site {site!r} (visit {visit})")
+        self.site = site
+        self.visit = visit
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """site -> visit indices (0-based, per-site counters) that inject."""
+
+    plan: Dict[str, FrozenSet[int]] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for site in self.plan:
+            if site not in SITES:
+                raise ValueError(
+                    f"unknown fault site {site!r}; expected one of {SITES}")
+
+    @classmethod
+    def once(cls, site: str, visit: int = 0) -> "FaultSchedule":
+        """Inject at one site, one visit — the CI sweep's shape."""
+        return cls({site: frozenset({visit})})
+
+    @classmethod
+    def at(cls, **site_visits: Iterable[int]) -> "FaultSchedule":
+        """Explicit plan: ``FaultSchedule.at(pool_exhausted=range(8))``."""
+        return cls({s: frozenset(int(v) for v in vs)
+                    for s, vs in site_visits.items()})
+
+    @classmethod
+    def seeded(cls, seed: int, rate: float = 0.05,
+               sites: Tuple[str, ...] = SITES,
+               horizon: int = 256) -> "FaultSchedule":
+        """Bernoulli(rate) per (site, visit) over ``horizon`` visits,
+        materialized deterministically from ``seed``."""
+        rng = np.random.default_rng(seed)
+        plan = {}
+        for site in sites:
+            hits = np.nonzero(rng.random(horizon) < rate)[0]
+            if hits.size:
+                plan[site] = frozenset(int(v) for v in hits)
+        return cls(plan)
+
+
+class FaultInjector:
+    """Counts visits per site against a schedule; records what fired."""
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+        self.visits: Counter = Counter()
+        self.fired: List[Tuple[str, int]] = []
+
+    def fire(self, site: str) -> bool:
+        v = self.visits[site]
+        self.visits[site] = v + 1
+        hit = v in self.schedule.plan.get(site, ())
+        if hit:
+            self.fired.append((site, v))
+        return hit
+
+    def check(self, site: str) -> None:
+        if self.fire(site):
+            raise InjectedFault(site, self.fired[-1][1])
+
+    def fired_sites(self) -> FrozenSet[str]:
+        return frozenset(s for s, _ in self.fired)
+
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def active() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+def install(schedule: FaultSchedule) -> FaultInjector:
+    """Install a fresh injector for ``schedule`` (replacing any current one)
+    and return it."""
+    global _ACTIVE
+    _ACTIVE = FaultInjector(schedule)
+    return _ACTIVE
+
+
+def uninstall() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def fire(site: str) -> bool:
+    """Site entry point: False (and no visit counting) when no injector is
+    installed."""
+    inj = _ACTIVE
+    return inj.fire(site) if inj is not None else False
+
+
+def check(site: str) -> None:
+    """Site entry point: raise ``InjectedFault`` if the site fires."""
+    inj = _ACTIVE
+    if inj is not None:
+        inj.check(site)
+
+
+@contextmanager
+def injected(schedule: FaultSchedule):
+    """``with faultinject.injected(FaultSchedule.once("dispatch")) as inj:``"""
+    inj = install(schedule)
+    try:
+        yield inj
+    finally:
+        uninstall()

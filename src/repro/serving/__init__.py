@@ -1,1 +1,6 @@
+from repro.serving.resilience import (Backoff, FaultEvent, Preempted,
+                                      ServingFault, VictimInfo, VictimPolicy)
 from repro.serving.server import Request, ServingEngine
+
+__all__ = ["Backoff", "FaultEvent", "Preempted", "Request", "ServingEngine",
+           "ServingFault", "VictimInfo", "VictimPolicy"]

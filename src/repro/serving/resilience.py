@@ -1,0 +1,111 @@
+"""Serving-layer fault-tolerance primitives (DESIGN.md §7).
+
+``ServingEngine`` composes four recovery mechanisms out of the pieces here:
+
+  * **structured faults** — ``ServingFault`` carries the site, the retry
+    count, and the underlying cause, so an operator (or a test) can branch
+    on *where* the stack failed instead of string-matching tracebacks.
+    ``Preempted`` is the clean-shutdown variant: the engine checkpointed
+    and the process should exit and be restarted with ``--restore``.
+  * **victim selection** — ``VictimPolicy`` picks which live row to evict
+    under pool pressure: least decode progress first (loses the least
+    work), then fewest pages (cheapest to replay), then lowest row id
+    (determinism). Requests evicted ``max_evictions`` times become
+    protected — they are never picked again, which bounds total replay
+    work and guarantees the engine makes forward progress instead of
+    ping-ponging two requests through one page reservation forever.
+  * **backoff** — ``Backoff`` yields the sleep schedule for megatick
+    dispatch retries (exponential, capped attempts). Tests zero the base
+    delay so retries are instant.
+  * **fault log** — ``FaultEvent`` records every recovery action the
+    engine took (retry, eviction, sync fallback, checkpoint), so the
+    acceptance tests can assert not just that outputs are token-identical
+    but that the intended degradation path actually ran.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional
+
+
+class ServingFault(RuntimeError):
+    """A serving failure the engine could not absorb.
+
+    ``site`` is the named failure point ("dispatch", "finish_timeout",
+    "nan_logits", "replay", "stall", ...), ``attempts`` the number of
+    retries burned before surfacing, ``cause`` the underlying exception
+    (also chained as ``__cause__`` where raised with ``raise ... from``).
+    """
+
+    def __init__(self, site: str, message: str, attempts: int = 0,
+                 cause: Optional[BaseException] = None):
+        super().__init__(f"[{site}] {message}")
+        self.site = site
+        self.attempts = attempts
+        self.cause = cause
+
+
+class Preempted(ServingFault):
+    """SIGTERM drained + checkpointed: restart with ``--restore``.
+
+    Not an error — the state the process is abandoning is fully captured in
+    the checkpoint at ``path`` (tick ``step``)."""
+
+    def __init__(self, step: int, path: str):
+        super().__init__("sigterm",
+                         f"preempted at tick {step}; checkpoint in {path} "
+                         "(restart with --restore)")
+        self.step = step
+        self.path = path
+
+
+@dataclass
+class FaultEvent:
+    """One recovery action taken by the serving engine."""
+    site: str                   # which named site (or "evict" / "watchdog")
+    tick: int                   # engine tick when it happened
+    action: str                 # "retry" | "evict" | "sync_fallback" | ...
+    detail: str = ""
+
+
+@dataclass(frozen=True)
+class VictimInfo:
+    """One eviction candidate, as the policy sees it."""
+    row: int
+    progress: int               # tokens emitted so far (work lost on evict)
+    pages: int                  # KV pages held (work to replay)
+    evictions: int              # times this request was already evicted
+
+
+@dataclass(frozen=True)
+class VictimPolicy:
+    """LRU-by-progress, then fewest-pages, then row id (deterministic)."""
+
+    max_evictions: int = 3      # then the request is protected
+
+    def select(self, candidates: List[VictimInfo]) -> Optional[int]:
+        eligible = [c for c in candidates if c.evictions < self.max_evictions]
+        if not eligible:
+            return None
+        best = min(eligible, key=lambda c: (c.progress, c.pages, c.row))
+        return best.row
+
+
+@dataclass(frozen=True)
+class Backoff:
+    """Exponential retry schedule for megatick dispatch failures."""
+
+    base_s: float = 0.05
+    factor: float = 2.0
+    max_attempts: int = 4
+
+    def delays(self) -> Iterator[float]:
+        """Sleep to apply AFTER each failed attempt (the first attempt is
+        free; ``max_attempts`` total attempts are made)."""
+        for i in range(self.max_attempts - 1):
+            yield self.base_s * (self.factor ** i)
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)

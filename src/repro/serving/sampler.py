@@ -3,6 +3,17 @@
 SpecEE's verification is defined on greedy argmax (the paper evaluates greedy
 and few-shot scoring); sampling modes apply to the dense path and to the
 final-layer logits of non-exited rows.
+
+Sampled decode is keyed PER ROW from the session key, the row's absolute
+position, and its previous token (``row_keys``) rather than from a
+split-per-step stream. The key is therefore a pure function of the row's own
+decode history — independent of batch composition, slot index, and global
+step count — which is what makes fault recovery exact: an evicted row that
+replays its prefix through the recompute path re-derives the same keys at
+the same positions and resamples the identical tokens (the recompute-prefix
+invariant, DESIGN.md §7). It is also what keeps ``step(num_ticks=K)``
+trivially token-identical to K single steps: no PRNG carry threads between
+ticks.
 """
 from __future__ import annotations
 
@@ -12,14 +23,45 @@ import jax
 import jax.numpy as jnp
 
 
+def row_keys(prng: jnp.ndarray, pos: jnp.ndarray,
+             last_token: jnp.ndarray) -> jnp.ndarray:
+    """(B,) per-row sample keys = fold(fold(session_key, pos), last_token).
+
+    ``pos``/``last_token``: (B,) int32 — the row's cache length BEFORE the
+    step and the token being fed, i.e. row-local history only.
+    """
+    def one(p, t):
+        return jax.random.fold_in(jax.random.fold_in(prng, p), t)
+    return jax.vmap(one)(pos.astype(jnp.uint32),
+                         last_token.astype(jnp.uint32))
+
+
 def sample(logits: jnp.ndarray, prng: jnp.ndarray, temperature: float = 0.0,
            top_k: Optional[int] = None) -> jnp.ndarray:
-    """logits: (B, V) fp32 -> (B,) int32 tokens."""
+    """logits: (B, V) fp32, one shared key -> (B,) int32 tokens."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _scale(logits, temperature, top_k)
+    return jax.random.categorical(prng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_rows(logits: jnp.ndarray, keys: jnp.ndarray,
+                temperature: float = 0.0,
+                top_k: Optional[int] = None) -> jnp.ndarray:
+    """logits: (B, V) fp32, per-row keys (from ``row_keys``) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _scale(logits, temperature, top_k)
+    return jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg))(keys, logits) \
+        .astype(jnp.int32)
+
+
+def _scale(logits: jnp.ndarray, temperature: float,
+           top_k: Optional[int]) -> jnp.ndarray:
     logits = logits / temperature
     if top_k is not None:
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[:, -1:]
         logits = jnp.where(logits < cutoff, -1e30, logits)
-    return jax.random.categorical(prng, logits, axis=-1).astype(jnp.int32)
+    return logits

@@ -1,0 +1,342 @@
+"""Fault-tolerant serving tests (DESIGN.md §7).
+
+Acceptance property (this PR): under a deterministic fault schedule that
+hits EVERY named injection site, the serving engine still completes every
+request token-identical to a fault-free run, with zero page leak. Plus the
+mechanism-level properties: checkpoint/restore resumes token-identically
+after a (simulated) SIGTERM; pool-pressure eviction replays evicted
+requests to the same outputs (greedy AND fixed-seed sampling, all three
+strategies); dispatch retries exhaust into a structured ``ServingFault``;
+``run_to_completion`` raises instead of silently returning while busy; a
+slow megatick finish trips the watchdog onto the sync path.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import CacheSpec, DenseStrategy
+from repro.configs import get_config
+from repro.core import engine as eng
+from repro.models.model import build_model
+from repro.runtime import faultinject
+from repro.runtime.faultinject import FaultSchedule, InjectedFault
+from repro.serving import (Backoff, Preempted, ServingEngine, ServingFault,
+                           VictimPolicy)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    run = get_config("llama2-7b").smoke()
+    # 3 slots so an oversubscribed 16-page pool (= 2 whole-row
+    # reservations at page_size 16 / max_seq 128) leaves a slot free while
+    # the pool is dry — the victim-eviction trigger
+    run = dataclasses.replace(
+        run, serve=dataclasses.replace(run.serve, max_batch=3))
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    sw = eng.init_specee(m, jax.random.PRNGKey(1))
+    return run, m, params, sw
+
+
+TIGHT_POOL = CacheSpec(kind="paged", page_size=16, num_pages=16)
+
+
+def _prompts(run, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, run.model.vocab_size, int(rng.integers(4, 12)))
+            for _ in range(n)]
+
+
+def _serve(model, params, sw, prompts, max_new=8, **kw):
+    se = ServingEngine(model, params, sw, **kw)
+    for p in prompts:
+        se.submit(p, max_new_tokens=max_new)
+    se.run_to_completion()
+    se.close()
+    return se
+
+
+def _outputs(se):
+    return {r.uid: list(r.output) for r in se.completed}
+
+
+def _stats(se):
+    return {r.uid: (list(r.exit_points), list(r.accept_lens))
+            for r in se.completed}
+
+
+def _assert_no_leak(se):
+    mgr = se.session.cache_mgr
+    if mgr.kind == "paged":
+        assert mgr.free_pages == mgr.num_pages, \
+            f"page leak: {mgr.free_pages}/{mgr.num_pages} free"
+
+
+# ---------------- the acceptance property ----------------
+def test_every_site_fires_and_tokens_match_fault_free(setup, tmp_path):
+    """One run, one deterministic schedule hitting ALL five sites (plus
+    real pool pressure from an oversubscribed pool): every request
+    completes, token-identical to the fault-free reference, zero pages
+    leaked, and the injector confirms each site actually fired."""
+    run, m, params, sw = setup
+    prompts = _prompts(run)
+    ref = _serve(m, params, sw, prompts, max_new=12, strategy="specee",
+                 megatick=4)
+    schedule = FaultSchedule.at(
+        dispatch=[1], finish_timeout=[3], nan_logits=[5],
+        pool_exhausted=range(2, 8), sigterm=[6])
+    kw = dict(strategy="specee", megatick=4, cache=TIGHT_POOL,
+              checkpoint_dir=str(tmp_path), backoff=Backoff(base_s=0.0),
+              evict_patience=2, cooldown_ticks=2)
+
+    fault_log = []                  # accumulated across restart incarnations
+    with faultinject.injected(schedule) as inj:
+        se = ServingEngine(m, params, sw, **kw)
+        for p in prompts:
+            se.submit(p, max_new_tokens=12)
+        for _ in range(8):          # preemption/restart cycles, bounded
+            try:
+                se.run_to_completion()
+                break
+            except Preempted:
+                fault_log.extend(se.fault_log)
+                se.close()
+                se = ServingEngine(m, params, sw, **kw)
+                assert se.restore_checkpoint()
+        else:
+            pytest.fail("engine never ran to completion")
+        fault_log.extend(se.fault_log)
+        se.close()
+        assert inj.fired_sites() == frozenset(faultinject.SITES), \
+            f"sites that fired: {sorted(inj.fired_sites())}"
+
+    assert _outputs(se) == _outputs(ref)
+    assert all(r.done for r in se.completed)
+    assert len(se.completed) == len(prompts)
+    _assert_no_leak(se)
+    # the recovery paths actually ran (not just the sites firing)
+    actions = {e.action for e in fault_log}
+    assert "retry" in actions and "recover" in actions
+
+
+# ---------------- eviction / recompute parity ----------------
+@pytest.mark.parametrize("strategy", ["dense", "specee", "tree"])
+def test_eviction_recompute_parity_greedy(setup, strategy):
+    """A request evicted under pool pressure and requeued produces the same
+    final token sequence (and exit/accept stats) as an uninterrupted run —
+    for every decode strategy."""
+    run, m, params, sw = setup
+    prompts = _prompts(run)
+    ref = _serve(m, params, sw, prompts, max_new=16, strategy=strategy,
+                 megatick=4)
+    se = _serve(m, params, sw, prompts, max_new=16, strategy=strategy,
+                megatick=4, cache=TIGHT_POOL, evict_patience=2)
+    evicts = [e for e in se.fault_log if e.action == "evict"]
+    assert evicts, "tight pool never drove an eviction"
+    assert _outputs(se) == _outputs(ref)
+    assert _stats(se) == _stats(ref)
+    assert max(r.evictions for r in se.completed) >= 1
+    _assert_no_leak(se)
+
+
+def test_eviction_recompute_parity_sampled(setup):
+    """Same property under fixed-seed SAMPLING: per-row position-keyed
+    sample keys make an evicted row resample identical tokens on replay."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, seed=3)
+    strat = DenseStrategy(temperature=1.0)
+    kw = dict(strategy=strat, megatick=4, prng_seed=7)
+    ref = _serve(m, params, sw, prompts, max_new=16, **kw)
+    se = _serve(m, params, sw, prompts, max_new=16, cache=TIGHT_POOL,
+                evict_patience=2, **kw)
+    assert [e for e in se.fault_log if e.action == "evict"]
+    assert _outputs(se) == _outputs(ref)
+    _assert_no_leak(se)
+
+
+def test_eviction_protection_terminates(setup):
+    """max_evictions protection: even when the pool holds only ONE row
+    reservation (every admission starves the rest), requests stop being
+    re-evicted after the cap and the engine still finishes everything."""
+    run, m, params, sw = setup
+    prompts = _prompts(run)
+    pool1 = CacheSpec(kind="paged", page_size=16, num_pages=8)
+    ref = _serve(m, params, sw, prompts, max_new=10, strategy="specee",
+                 megatick=2)
+    se = _serve(m, params, sw, prompts, max_new=10, strategy="specee",
+                megatick=2, cache=pool1, evict_patience=1,
+                victim=VictimPolicy(max_evictions=2))
+    assert _outputs(se) == _outputs(ref)
+    assert max(r.evictions for r in se.completed) <= 2
+    _assert_no_leak(se)
+
+
+# ---------------- checkpoint / restore ----------------
+def test_checkpoint_restore_token_parity(setup, tmp_path):
+    """SIGTERM (simulated via the guard) mid-decode: drain + checkpoint +
+    Preempted; a fresh engine restores and finishes token-identically."""
+    run, m, params, sw = setup
+    prompts = _prompts(run)
+    ref = _serve(m, params, sw, prompts, max_new=8, strategy="specee",
+                 megatick=4)
+    kw = dict(strategy="specee", megatick=4, checkpoint_dir=str(tmp_path))
+    se = ServingEngine(m, params, sw, **kw)
+    for p in prompts:
+        se.submit(p, max_new_tokens=8)
+    for _ in range(3):
+        se.step()
+    se.guard.requested = True       # what the real SIGTERM handler sets
+    with pytest.raises(Preempted):
+        se.step()
+    se.close()
+
+    se2 = ServingEngine(m, params, sw, **kw)
+    assert se2.restore_checkpoint()
+    se2.run_to_completion()
+    se2.close()
+    assert _outputs(se2) == _outputs(ref)
+    assert _stats(se2) == _stats(ref)
+    assert len(se2.completed) == len(prompts)
+    _assert_no_leak(se2)
+
+
+def test_restore_on_empty_dir_is_fresh_boot(setup, tmp_path):
+    run, m, params, sw = setup
+    se = ServingEngine(m, params, sw, strategy="specee",
+                       checkpoint_dir=str(tmp_path / "empty"))
+    assert se.restore_checkpoint() is False
+    se.close()
+
+
+def test_snapshot_requires_drained_pipeline(setup):
+    """A snapshot straddling an unread async megatick would capture host
+    mirrors that trail the device — the session refuses."""
+    run, m, params, sw = setup
+    se = ServingEngine(m, params, sw, strategy="specee", megatick=2,
+                       async_ticks=True)
+    se.submit(_prompts(run, n=1)[0], max_new_tokens=6)
+    while not se.in_flight:
+        se.step()
+    with pytest.raises(AssertionError, match="outstanding megaticks"):
+        se.session.snapshot()
+    se.drain()
+    state, meta = se.session.snapshot()     # drained: fine
+    assert meta["strategy"] == "specee"
+    se.close()
+
+
+def test_scheduler_abort_active_requeues_at_front(setup):
+    """Checkpoint drain aborts the in-flight chunked admission back to the
+    queue FRONT — it keeps its turn, and no pages stay claimed."""
+    run, m, params, sw = setup
+    se = ServingEngine(m, params, sw, strategy="specee", prefill_chunk=4)
+    rng = np.random.default_rng(9)
+    # a live decode row is what throttles chunked admission to one chunk
+    # per tick (an idle engine runs all chunks in a single tick)
+    se.submit(rng.integers(0, run.model.vocab_size, 4), max_new_tokens=8)
+    se.step()
+    long_prompt = rng.integers(0, run.model.vocab_size, 20)
+    req = se.submit(long_prompt, max_new_tokens=4)
+    se.step()                       # one 4-token chunk of a 20-token prompt
+    assert se.scheduler.admitting == [req.uid]
+    free_before = se.session.cache_mgr.free_pages
+    assert se.scheduler.abort_active() == req.uid
+    assert se.scheduler.admitting == []
+    assert se.scheduler.queued[0] == req.uid
+    assert se.session.cache_mgr.free_pages == free_before
+    se.run_to_completion()          # and it still completes after the abort
+    assert req.done and len(req.output) == 4
+    se.close()
+
+
+# ---------------- injection sweep (one site at a time) ----------------
+@pytest.mark.parametrize("site", faultinject.SITES)
+def test_single_site_injection_recovers(setup, tmp_path, site):
+    run, m, params, sw = setup
+    prompts = _prompts(run)
+    ref = _serve(m, params, sw, prompts, max_new=8, strategy="specee",
+                 megatick=4)
+    schedule = (FaultSchedule.at(pool_exhausted=range(8))
+                if site == "pool_exhausted"
+                else FaultSchedule.once(site, visit=1))
+    kw = dict(strategy="specee", megatick=4, backoff=Backoff(base_s=0.0),
+              cooldown_ticks=2)
+    with faultinject.injected(schedule) as inj:
+        if site == "sigterm":
+            kw["checkpoint_dir"] = str(tmp_path)
+            se = ServingEngine(m, params, sw, **kw)
+            for p in prompts:
+                se.submit(p, max_new_tokens=8)
+            with pytest.raises(Preempted):
+                se.run_to_completion()
+            se.close()
+            se = ServingEngine(m, params, sw, **kw)
+            assert se.restore_checkpoint()
+            se.run_to_completion()
+            se.close()
+        else:
+            se = _serve(m, params, sw, prompts, max_new=8, **kw)
+        assert site in inj.fired_sites()
+    assert _outputs(se) == _outputs(ref)
+    assert len(se.completed) == len(prompts)
+    _assert_no_leak(se)
+    if site in ("finish_timeout", "nan_logits"):
+        assert any(e.action == "recover" and e.site == site
+                   for e in se.fault_log)
+        assert any(e.action == "evict" for e in se.fault_log)
+    if site == "dispatch":
+        assert any(e.action == "retry" and e.site == "dispatch"
+                   for e in se.fault_log)
+
+
+def test_dispatch_retries_exhaust_to_structured_fault(setup):
+    """Every dispatch attempt failing (injected on all visits) burns the
+    whole backoff schedule and surfaces ServingFault with the site, the
+    attempt count, and the underlying InjectedFault as the cause."""
+    run, m, params, sw = setup
+    backoff = Backoff(base_s=0.0, max_attempts=3)
+    with faultinject.injected(FaultSchedule.at(dispatch=range(100))):
+        se = ServingEngine(m, params, sw, strategy="specee", megatick=2,
+                           backoff=backoff)
+        se.submit(_prompts(run, n=1)[0], max_new_tokens=4)
+        with pytest.raises(ServingFault) as ei:
+            se.run_to_completion()
+        se.close()
+    assert ei.value.site == "dispatch"
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.cause, InjectedFault)
+    assert sum(1 for e in se.fault_log if e.action == "retry") == 2
+
+
+def test_run_to_completion_raises_on_stall(setup):
+    """max_ticks exhausted while still busy is a hang, not a success —
+    run_to_completion must surface it (the historical silent return made
+    wedged serving loops undiagnosable)."""
+    run, m, params, sw = setup
+    # a pool that never admits: the queue stays populated forever
+    with faultinject.injected(FaultSchedule.at(pool_exhausted=range(10_000))):
+        se = ServingEngine(m, params, sw, strategy="specee")
+        se.submit(_prompts(run, n=1)[0], max_new_tokens=4)
+        with pytest.raises(ServingFault) as ei:
+            se.run_to_completion(max_ticks=20)
+        se.close()
+    assert ei.value.site == "stall"
+    assert "queued=1" in str(ei.value)
+
+
+def test_watchdog_slow_finish_falls_back_to_sync(setup):
+    """A finish slower than watchdog_s keeps its (valid) results but parks
+    the engine on the synchronous path for cooldown_ticks — and the run
+    still matches the fault-free reference."""
+    run, m, params, sw = setup
+    prompts = _prompts(run)
+    ref = _serve(m, params, sw, prompts, max_new=8, strategy="specee",
+                 megatick=4)
+    se = _serve(m, params, sw, prompts, max_new=8, strategy="specee",
+                megatick=4, watchdog_s=1e-9, cooldown_ticks=3)
+    falls = [e for e in se.fault_log if e.action == "sync_fallback"]
+    assert falls and falls[0].site == "watchdog"
+    assert _outputs(se) == _outputs(ref)
+    _assert_no_leak(se)

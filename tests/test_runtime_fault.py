@@ -1,0 +1,154 @@
+"""Direct unit tests for repro.runtime.fault and repro.runtime.faultinject.
+
+The StragglerMonitor / plan_remesh logic was previously covered only
+indirectly through launcher smoke runs; these pin the edge cases (median/MAD
+on even-length fleets, a straggler not inflating its own threshold, the
+re-mesh degradation ladder) and the PreemptionGuard install/uninstall
+contract the serving engine now relies on.
+"""
+import os
+import signal
+
+import pytest
+
+from repro.runtime import faultinject
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor, plan_remesh
+from repro.runtime.faultinject import (FaultInjector, FaultSchedule,
+                                       InjectedFault)
+
+
+# ---------------- StragglerMonitor ----------------
+def _feed(mon, host, value, n=None):
+    for _ in range(n if n is not None else mon.min_samples):
+        mon.record(host, value)
+
+
+def test_fleet_stats_needs_two_hosts():
+    mon = StragglerMonitor()
+    assert mon.fleet_stats() == (0.0, 0.0)
+    _feed(mon, 0, 1.0)
+    assert mon.fleet_stats() == (0.0, 0.0)     # one host: no fleet yet
+    assert mon.stragglers() == []
+
+
+def test_fleet_stats_even_fleet_median():
+    """Even-length fleets take the upper-median element (sorted[n//2]) for
+    both location and scale — pinned so a refactor to mean-of-middle-two
+    shows up as a test change, not a silent behavior shift."""
+    mon = StragglerMonitor()
+    for host, v in enumerate([1.0, 2.0, 3.0, 4.0]):
+        _feed(mon, host, v)
+    med, mad = mon.fleet_stats()
+    assert med == pytest.approx(3.0)            # sorted[4 // 2]
+    assert mad == pytest.approx(1.0)            # |v - 3| = [2, 1, 0, 1]
+
+
+def test_straggler_does_not_inflate_own_threshold():
+    """Median-based location/scale: one wildly slow host must still be
+    flagged (a mean-based threshold would chase the outlier)."""
+    mon = StragglerMonitor(sigma=3.0)
+    for host in range(6):
+        _feed(mon, host, 1.0)
+    _feed(mon, 6, 50.0)
+    assert mon.stragglers() == [6]
+    med, _ = mon.fleet_stats()
+    assert med == pytest.approx(1.0)            # fleet median unmoved
+
+
+def test_min_samples_filters_cold_hosts():
+    mon = StragglerMonitor(min_samples=8)
+    for host in range(4):
+        _feed(mon, host, 1.0)
+    mon.record(9, 100.0)                        # 1 sample: not yet trusted
+    assert mon.stragglers() == []
+    _feed(mon, 9, 100.0)
+    assert mon.stragglers() == [9]
+
+
+# ---------------- plan_remesh ----------------
+def test_plan_remesh_shrinks_data_parallel():
+    assert plan_remesh(64, 8) == (8, 8)
+    assert plan_remesh(63, 8) == (7, 8)         # one lost host: DP 8 -> 7
+    assert plan_remesh(8, 8) == (1, 8)
+
+
+def test_plan_remesh_multi_pod_ladder():
+    assert plan_remesh(64, 8, pods=4) == (4, 2, 8)
+    # pods can't each hold a TP group: degrade to single pod, then give up
+    assert plan_remesh(12, 8, pods=2) == (1, 8)
+    assert plan_remesh(4, 8, pods=2) is None
+
+
+def test_plan_remesh_none_when_tp_group_lost():
+    assert plan_remesh(7, 8) is None
+
+
+# ---------------- PreemptionGuard ----------------
+def test_guard_install_idempotent_and_uninstall_restores():
+    before = signal.getsignal(signal.SIGTERM)
+    g = PreemptionGuard()
+    g.install()
+    installed = signal.getsignal(signal.SIGTERM)
+    assert installed is not before
+    g.install()                                 # idempotent: same handler
+    assert signal.getsignal(signal.SIGTERM) is installed
+    g.uninstall()
+    assert signal.getsignal(signal.SIGTERM) is before
+    g.uninstall()                               # no-op when not installed
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+def test_guard_catches_sigterm_and_nests():
+    outer, inner = PreemptionGuard(), PreemptionGuard()
+    outer.install()
+    inner.install()
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert inner.should_save()
+        assert outer.should_save()              # handlers chain outward
+    finally:
+        inner.uninstall()
+        outer.uninstall()
+
+
+# ---------------- faultinject ----------------
+def test_schedule_rejects_unknown_site():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSchedule.once("warp_core_breach")
+
+
+def test_injector_counts_visits_per_site():
+    inj = FaultInjector(FaultSchedule.at(dispatch=[1], nan_logits=[0]))
+    assert inj.fire("dispatch") is False        # visit 0
+    assert inj.fire("nan_logits") is True       # visit 0 (independent count)
+    assert inj.fire("dispatch") is True         # visit 1
+    assert inj.fire("dispatch") is False        # visit 2
+    assert inj.fired == [("nan_logits", 0), ("dispatch", 1)]
+    assert inj.fired_sites() == frozenset({"dispatch", "nan_logits"})
+
+
+def test_check_raises_with_site_and_visit():
+    inj = FaultInjector(FaultSchedule.once("dispatch"))
+    with pytest.raises(InjectedFault) as ei:
+        inj.check("dispatch")
+    assert ei.value.site == "dispatch" and ei.value.visit == 0
+
+
+def test_seeded_schedule_deterministic():
+    a = FaultSchedule.seeded(seed=42, rate=0.2, horizon=64)
+    b = FaultSchedule.seeded(seed=42, rate=0.2, horizon=64)
+    c = FaultSchedule.seeded(seed=43, rate=0.2, horizon=64)
+    assert a.plan == b.plan
+    assert a.plan != c.plan
+    assert any(a.plan.values())                 # rate 0.2 over 64: non-empty
+
+
+def test_module_level_noop_without_injector():
+    faultinject.uninstall()
+    assert faultinject.fire("dispatch") is False
+    faultinject.check("dispatch")               # no raise
+    with faultinject.injected(FaultSchedule.once("dispatch")) as inj:
+        assert faultinject.active() is inj
+        with pytest.raises(InjectedFault):
+            faultinject.check("dispatch")
+    assert faultinject.active() is None

@@ -1,16 +1,29 @@
 """Paper Fig. 19 ablation: T1 (predictor everywhere) → +T2 (two-level
-scheduling) → +T3 (tree speculative decoding with hyper-token mapping)."""
+scheduling) → +T3 (tree speculative decoding with hyper-token mapping).
+
+Also records the quant × exit-threshold Pareto sweep (``quant_pareto``):
+weight-only fp32 / int8 / int4 LM-head+projection compression crossed with
+exit thresholds, each point scoring decode speed, average exit depth, and
+token agreement against the fp dense greedy reference — the speed/quality
+frontier the compressed gate kernels trade along. Written into the
+``quant_pareto`` row-group of ``BENCH_exit_gate.json``."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Timer, get_bundle, token_batches, decode_run
+from benchmarks.common import (Timer, get_bundle, token_batches, decode_run,
+                               merge_bench_json)
 from repro.api import TreeStrategy
 from repro.core.tree import TreeSpec
+
+_GATE_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_exit_gate.json")
 
 
 def run(timer: Timer) -> None:
@@ -46,7 +59,39 @@ def run(timer: Timer) -> None:
               f"tokens_per_forward={(emitted-1)/max(ticks,1):.2f}")
 
 
+def quant_pareto(timer: Timer, new: int = 16) -> list:
+    """Quant level × exit threshold Pareto sweep.
+
+    Every point decodes the same prompt through the AR-SpecEE strategy with
+    a weight-only quantized bundle (None = fp32); quality is the per-token
+    agreement with the fp32 dense greedy run (greedy decode is
+    deterministic, so disagreement is exactly the compression + early-exit
+    error surfacing in token space)."""
+    b = get_bundle()
+    prompts = token_batches(b.run, 1, B=1, S=16, seed=33)[0]
+    ref = decode_run(b, "dense", prompts, new_tokens=new)["tokens"]
+    rows = []
+    for qspec in (None, "int8", "int4"):
+        for thr in (0.3, 0.6, 0.9):
+            r = decode_run(b, "specee", prompts, new_tokens=new,
+                           threshold=thr, quant=qspec)
+            match = float(np.mean(r["tokens"] == ref))
+            name = qspec or "fp32"
+            rows.append({"quant": name, "threshold": thr,
+                         "tok_per_s": r["tok_per_s"],
+                         "avg_units": r["avg_units"],
+                         "avg_exit": r["avg_exit"],
+                         "match_vs_dense_fp32": match,
+                         "backend": jax.default_backend()})
+            timer.add(f"quant_pareto/{name}_thr{thr}",
+                      r["seconds"] / new * 1e6,
+                      f"match={match:.3f} avg_units={r['avg_units']:.2f}")
+    merge_bench_json(_GATE_JSON, "quant_pareto", rows)
+    return rows
+
+
 if __name__ == "__main__":
     t = Timer()
     run(t)
+    quant_pareto(t)
     t.emit()

@@ -4,6 +4,17 @@ the fused-vs-unfused exit-gate A/B (PR: fused exit-gate pipeline), which
 records ``BENCH_exit_gate.json`` at the repo root so the perf trajectory of
 the decode hot loop is tracked across PRs.
 
+``BENCH_exit_gate.json`` schema — an object of named row-groups:
+  * ``gate_ab``       — fused-vs-unfused gate timing + analytic ``hbm_bytes``
+                        per (B, D, V, k) shape (this module);
+  * ``quant_verify``  — fp vs int8/int4 streaming-verify timing; the
+                        quantized rows carry ``wbits`` and their
+                        ``hbm_bytes`` shrink with the weight width (this
+                        module);
+  * ``quant_pareto``  — quant level × exit threshold speed/quality sweep
+                        (``bench_ablation.quant_pareto``).
+A legacy top-level list is read back as the ``gate_ab`` group.
+
     python -m benchmarks.bench_predictor              # everything
     python -m benchmarks.bench_predictor --gate-only  # just the gate A/B
 """
@@ -114,9 +125,12 @@ def _ab_time(fn_a, fn_b, args, iters: int = 5, rounds: int = 24):
 
 
 def _gate_bytes(B, D, V, k, wbytes=4):
-    """Analytic per-exit-point HBM traffic (see kernels/exit_gate docstring)."""
+    """Analytic per-exit-point HBM traffic (see kernels/exit_gate docstring).
+    ``wbytes``: bytes per LM-head weight (4 fp32, 1 int8, 0.5 packed int4);
+    quantized heads also stream their fp32 per-column scale row."""
+    scales = V * 4 if wbytes < 4 else 0
     gather = k * D * wbytes
-    head = D * V * wbytes
+    head = D * V * wbytes + scales
     logits_round_trips = 3 * B * V * 4      # write + read + argmax read
     return {"unfused": gather + head + logits_round_trips,
             "fused": gather + head}
@@ -187,8 +201,52 @@ def bench_exit_gate(timer: Timer) -> list:
         timer.add(f"exit_gate/B{B}_D{D}_V{V}", row["fused_us"],
                   f"unfused={row['unfused_us']:.1f}us "
                   f"speedup={row['speedup']:.2f}x")
-    with open(_GATE_JSON, "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import merge_bench_json
+    merge_bench_json(_GATE_JSON, "gate_ab", rows)
+    return rows
+
+
+def bench_quant_verify(timer: Timer) -> list:
+    """fp vs int8/int4 streaming verify at each gate shape.
+
+    Times the streaming impl the platform actually uses (Pallas kernel on
+    TPU, XLA scan off-TPU) with the fp LM head against the quantized one;
+    the quantized rows' analytic ``hbm_bytes`` shrink with the weight width
+    (int8 ≈ 4×, packed int4 ≈ 8× less head traffic plus the fp32 scale
+    row) — the memory-bound decode win the fused dequant buys. Written to
+    the ``quant_verify`` row-group of ``BENCH_exit_gate.json``."""
+    from benchmarks.common import merge_bench_json
+    from repro.kernels import on_tpu
+    from repro.quant import quantize_tensor
+
+    impl = "kernel" if on_tpu() else "xla"
+    rows = []
+    for B, D, V, k in GATE_SHAPES:
+        hn = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+        lm_w = jax.random.normal(jax.random.PRNGKey(2), (D, V)) * 0.05
+        f_fp = jax.jit(lambda h, w: gate_ops.verify_argmax(h, w, impl=impl))
+        for bits, wbytes in ((8, 1), (4, 0.5)):
+            qt = quantize_tensor(lm_w, bits)
+            f_q = jax.jit(lambda h, q: gate_ops.verify_argmax(h, q,
+                                                              impl=impl))
+            t_fp, t_q = _ab_time(lambda h: f_fp(h, lm_w),
+                                 lambda h: f_q(h, qt), (hn,),
+                                 iters=5, rounds=8)
+            bytes_fp = _gate_bytes(B, D, V, k)
+            bytes_q = _gate_bytes(B, D, V, k, wbytes=wbytes)
+            rows.append({"B": B, "D": D, "V": V, "k": k, "wbits": bits,
+                         "impl": impl,
+                         "verify_fp_us": t_fp * 1e6,
+                         "verify_q_us": t_q * 1e6,
+                         "hbm_bytes_fp": bytes_fp,
+                         "hbm_bytes": bytes_q,
+                         "hbm_reduction":
+                             bytes_fp["fused"] / bytes_q["fused"],
+                         "backend": jax.default_backend()})
+            timer.add(f"quant_verify/D{D}_V{V}_q{bits}", t_q * 1e6,
+                      f"fp={t_fp*1e6:.1f}us "
+                      f"hbm={bytes_fp['fused']/bytes_q['fused']:.2f}x less")
+    merge_bench_json(_GATE_JSON, "quant_verify", rows)
     return rows
 
 
@@ -196,7 +254,9 @@ if __name__ == "__main__":
     t = Timer()
     if "--gate-only" in sys.argv:
         bench_exit_gate(t)
+        bench_quant_verify(t)
     else:
         run(t)
         bench_exit_gate(t)
+        bench_quant_verify(t)
     t.emit()

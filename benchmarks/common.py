@@ -6,6 +6,7 @@ TRAINED predictors — the full SpecEE pipeline end-to-end on CPU.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -34,6 +35,28 @@ class Bundle:
 
 
 _BUNDLE: Optional[Bundle] = None
+
+
+def merge_bench_json(path: str, key: str, rows: list) -> None:
+    """Read-modify-write one named row-group of a benchmark JSON artifact.
+
+    The artifact is ``{"<group>": [row, ...], ...}`` so independent benches
+    (gate A/B in bench_predictor, quant Pareto in bench_ablation) can each
+    refresh their own rows without clobbering the others. A legacy top-level
+    list (the pre-row-group BENCH_exit_gate.json shape) is adopted as the
+    ``gate_ab`` group.
+    """
+    data: Dict[str, Any] = {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if isinstance(data, list):
+            data = {"gate_ab": data}
+    except (OSError, ValueError):
+        data = {}
+    data[key] = rows
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
 
 
 def token_batches(run, n: int, B: int = 4, S: int = 32, seed: int = 0):
@@ -82,13 +105,16 @@ def get_bundle(arch: str = "llama2-7b", train_steps: int = 30,
 
 
 def decode_run(bundle: Bundle, mode: str, prompts: jnp.ndarray,
-               new_tokens: int = 24, threshold: Optional[float] = None
-               ) -> Dict[str, Any]:
+               new_tokens: int = 24, threshold: Optional[float] = None,
+               quant=None) -> Dict[str, Any]:
     """Greedy-decode ``new_tokens`` for each prompt row through the unified
     decode API (strategy step = the exact computation the serving engine
     jits per tick).
 
     mode: "dense" | "specee" | "specee_t1" (no scheduling).
+    quant: None | "int8" | "int4" — weight-only compression (repro.quant);
+    prefill runs on the dequantized view, decode on the fused int kernels
+    (the same split the Engine makes).
     Returns tokens, wall time, avg units executed, exit histogram."""
     import dataclasses
 
@@ -101,16 +127,24 @@ def decode_run(bundle: Bundle, mode: str, prompts: jnp.ndarray,
         m = build_model(run, m.flags)
     strat = (DenseStrategy() if mode == "dense"
              else SpecEEStrategy(threshold=threshold))
+    qw = None
+    pparams, psw = params, sw
+    if quant is not None:
+        from repro import quant as quant_lib
+        qw = quant_lib.quantize_params(params, sw,
+                                       quant_lib.QuantSpec.resolve(quant))
+        pparams, psw = quant_lib.dequantized_reference(params, sw, qw)
     B, T = prompts.shape
     max_seq = T + new_tokens + 2
-    first, st = strat.init_state(m, params, sw, {"tokens": prompts}, max_seq)
-    step = jax.jit(lambda p, s, stt: strat.step(m, p, s, stt))
+    first, st = strat.init_state(m, pparams, psw, {"tokens": prompts},
+                                 max_seq)
+    step = jax.jit(lambda p, s, stt, q: strat.step(m, p, s, stt, qw=q))
     # warmup (compile)
-    step(params, sw, st)
+    step(params, sw, st, qw)
     toks, units, exits = [first], [], []
     t0 = time.perf_counter()
     for _ in range(new_tokens):
-        res, st = step(params, sw, st)
+        res, st = step(params, sw, st, qw)
         toks.append(res.tokens[:, 0])
         units.append(res.units_run)
         exits.append(res.exit_layer)

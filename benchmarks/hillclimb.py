@@ -119,7 +119,8 @@ GATE_BLOCK_SHAPES = [(8, 128, 512), (8, 1024, 16000), (8, 2048, 32000),
 
 
 def sweep_gate_blocks(rounds: int = 8, iters: int = 5,
-                      write_table: bool = True) -> Dict[str, int]:
+                      write_table: bool = True,
+                      quant: bool = True) -> Dict[str, int]:
     """Sweep ``block_v`` for the streaming verify pair per (D, V).
 
     Times the impl the platform actually streams with ("kernel" on TPU,
@@ -127,13 +128,16 @@ def sweep_gate_blocks(rounds: int = 8, iters: int = 5,
     round-robin and keeping per-candidate minimums so shared-machine noise
     hits all candidates symmetrically. Scores argmax + top-k combined and
     merges the winners into repro/configs/gate_blocks.json under the
-    current backend's key.
+    current backend's key. With ``quant`` the int8/int4 verify variants are
+    swept too (keys carry an ``@q8``/``@q4`` suffix — the int tiles shift
+    the VMEM-residency trade-off, so their winners are cached separately).
     """
     import jax
     import jax.numpy as jnp
     from repro.kernels import on_tpu
     from repro.kernels.exit_gate import ops as gate_ops
     from repro.kernels.exit_gate import tuning
+    from repro.quant import quantize_tensor
 
     impl = "kernel" if on_tpu() else "xla"
     k = 4
@@ -141,30 +145,35 @@ def sweep_gate_blocks(rounds: int = 8, iters: int = 5,
     for B, D, V in GATE_BLOCK_SHAPES:
         hn = jax.random.normal(jax.random.PRNGKey(0), (B, D))
         lm_w = jax.random.normal(jax.random.PRNGKey(1), (D, V)) * 0.05
+        variants = [("", lm_w)]
+        if quant:
+            variants += [(f"@q{bits}", quantize_tensor(lm_w, bits))
+                         for bits in (8, 4)]
         cands = [bv for bv in tuning.BLOCK_V_CANDIDATES if bv <= max(V, 128)]
-        fns = {}
-        for bv in cands:
-            fns[bv] = (
-                jax.jit(lambda h, w, bv=bv: gate_ops.verify_argmax(
-                    h, w, impl=impl, block_v=bv)),
-                jax.jit(lambda h, w, bv=bv: gate_ops.verify_topk(
-                    h, w, k, impl=impl, block_v=bv)))
-            for f in fns[bv]:
-                jax.block_until_ready(f(hn, lm_w))          # compile
-        t_best = {bv: float("inf") for bv in cands}
-        for _ in range(rounds):
+        for sfx, w in variants:
+            fns = {}
             for bv in cands:
-                t0 = time.perf_counter()
-                for _ in range(iters):
-                    out_a = fns[bv][0](hn, lm_w)
-                    out_t = fns[bv][1](hn, lm_w)
-                jax.block_until_ready((out_a, out_t))
-                t_best[bv] = min(t_best[bv],
-                                 (time.perf_counter() - t0) / iters)
-        win = min(t_best, key=t_best.get)
-        best[f"{D}x{V}"] = win
-        print(f"[gate-blocks] B={B} D={D} V={V}: block_v={win} "
-              + " ".join(f"{bv}:{t_best[bv]*1e6:.0f}us" for bv in cands))
+                fns[bv] = (
+                    jax.jit(lambda h, w, bv=bv: gate_ops.verify_argmax(
+                        h, w, impl=impl, block_v=bv)),
+                    jax.jit(lambda h, w, bv=bv: gate_ops.verify_topk(
+                        h, w, k, impl=impl, block_v=bv)))
+                for f in fns[bv]:
+                    jax.block_until_ready(f(hn, w))          # compile
+            t_best = {bv: float("inf") for bv in cands}
+            for _ in range(rounds):
+                for bv in cands:
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        out_a = fns[bv][0](hn, w)
+                        out_t = fns[bv][1](hn, w)
+                    jax.block_until_ready((out_a, out_t))
+                    t_best[bv] = min(t_best[bv],
+                                     (time.perf_counter() - t0) / iters)
+            win = min(t_best, key=t_best.get)
+            best[f"{D}x{V}{sfx}"] = win
+            print(f"[gate-blocks] B={B} D={D} V={V}{sfx}: block_v={win} "
+                  + " ".join(f"{bv}:{t_best[bv]*1e6:.0f}us" for bv in cands))
     if write_table:
         backend = jax.default_backend()
         table = dict(tuning._table())

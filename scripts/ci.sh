@@ -39,6 +39,12 @@ if [ "$#" -eq 0 ]; then
   echo "[ci] launch/serve.py --ci --megatick 8 (megatick smoke)"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --ci --megatick 8
+  # quantized serving smoke: weight-only int8 bundle (repro.quant) with
+  # dequant fused into the decode kernels; --ci asserts completion, zero
+  # page leak, and token parity against a quantized megatick=1 reference
+  echo "[ci] launch/serve.py --ci --quant int8 --megatick 4 (quant smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --quant int8 --megatick 4
 
   # kill/restore smoke: SIGTERM a serving run mid-decode (the engine drains
   # the in-flight megatick, saves a step-atomic checkpoint, exits 17), then

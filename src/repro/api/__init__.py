@@ -32,11 +32,12 @@ from repro.api.session import (Admission, DecodeSession, Engine,
 from repro.api.strategies import (DecodeStrategy, DenseStrategy,
                                   SpecEEStrategy, TreeStrategy, get_strategy)
 from repro.api.types import StepResult
+from repro.quant import QuantSpec
 
 __all__ = [
     "Engine", "DecodeSession", "StepResult", "DecodeStrategy",
     "DenseStrategy", "SpecEEStrategy", "TreeStrategy", "get_strategy",
     "CacheSpec", "KVCacheManager", "DenseKVCache", "PagedKVCache",
     "make_cache_manager", "ChunkedPrefillScheduler", "Admitted", "Admission",
-    "MegatickHandle",
+    "MegatickHandle", "QuantSpec",
 ]

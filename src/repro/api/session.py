@@ -91,18 +91,28 @@ class Engine:
     """Binds a model + weights to a decode strategy; factory for sessions."""
 
     def __init__(self, model: Model, params, sw=None,
-                 strategy: Union[str, DecodeStrategy, None] = None):
+                 strategy: Union[str, DecodeStrategy, None] = None,
+                 quant=None):
         self.model = model
         self.params = params
         self.sw = sw
         self.strategy = get_strategy(strategy)
         self.strategy.validate(model, sw)
+        # weight-only quantization (repro.quant): ``quant`` is a QuantSpec /
+        # "int8" / "int4" / None. The quantized bundle is a PARALLEL pytree —
+        # ``self.params`` stays untouched (paper: early exiting "without
+        # affecting the model original parameters") and rides into the jitted
+        # step as an extra argument so the kernels see the int tiles.
+        from repro import quant as quant_lib
+        self.quant_spec = quant_lib.QuantSpec.resolve(quant)
+        self.qw = quant_lib.quantize_params(params, sw, self.quant_spec)
+        self._prefill_view = None
         strat = self.strategy
         # the decode state (KV cache pytree included — paged pools + page
         # table too) is DONATED: XLA updates the cache in place every tick
         # instead of reallocating it, and stale state references fail loudly
         self._step_jit = jax.jit(
-            lambda p, s, st: strat.step(model, p, s, st),
+            lambda p, s, st, qw: strat.step(model, p, s, st, qw=qw),
             donate_argnums=(2,))
         self._extend_jit = jax.jit(
             lambda p, toks, cache, n: model.prefill_extend(p, toks, cache, n),
@@ -120,22 +130,44 @@ class Engine:
         if fn is None:
             strat, model = self.strategy, self.model
             fn = jax.jit(
-                lambda p, s, st, limits: strat.megatick(model, p, s, st,
-                                                        limits, num_ticks),
+                lambda p, s, st, limits, qw: strat.megatick(
+                    model, p, s, st, limits, num_ticks, qw=qw),
                 donate_argnums=(2,))
             self._mega_jits[num_ticks] = fn
         return fn
 
     @classmethod
     def create(cls, model: Model, params, sw=None,
-               strategy: Union[str, DecodeStrategy, None] = None) -> "Engine":
+               strategy: Union[str, DecodeStrategy, None] = None,
+               quant=None) -> "Engine":
         """The canonical constructor: ``Engine.create(model, params, sw,
-        strategy="dense"|"specee"|"tree"|DecodeStrategy(...))``."""
-        return cls(model, params, sw=sw, strategy=strategy)
+        strategy="dense"|"specee"|"tree"|DecodeStrategy(...),
+        quant=None|"int8"|"int4"|QuantSpec(...))``."""
+        return cls(model, params, sw=sw, strategy=strategy, quant=quant)
 
     @property
     def emit_width(self) -> int:
         return self.strategy.emit_width(self.model)
+
+    def prefill_weights(self):
+        """(params, sw) the prefill/admission paths consume.
+
+        Under weight-only quantization the DECODE step sees the int tiles
+        (dequant fused into the kernels); prefill must see the numerically
+        identical dequantized weights, or the prefill-written KV cache and
+        first token would come from the fp originals and diverge from what
+        the quantized decode loop would have produced (visible at int4,
+        where the quantization error is large enough to flip argmax). The
+        dequantized view is materialized once and cached — prefill is the
+        compute-bound cold path; the decode hot loop still runs on the
+        compressed tiles."""
+        if self.qw is None:
+            return self.params, self.sw
+        if self._prefill_view is None:
+            from repro import quant as quant_lib
+            self._prefill_view = quant_lib.dequantized_reference(
+                self.params, self.sw, self.qw)
+        return self._prefill_view
 
     def new_session(self, batch: Optional[int] = None,
                     max_seq: Optional[int] = None,
@@ -456,8 +488,9 @@ class DecodeSession:
                    else e.model.run.serve.max_new_tokens)
             max_seq = T + new + e.emit_width + 1
         self._max_seq = max_seq
+        pparams, psw = e.prefill_weights()
         first, self._state = e.strategy.init_state(
-            e.model, e.params, e.sw, batch, max_seq,
+            e.model, pparams, psw, batch, max_seq,
             prng=jax.random.PRNGKey(self._prng_seed))
         self.cache_mgr = self._make_manager(B, max_seq)
         self._state = self._state._replace(
@@ -521,7 +554,8 @@ class DecodeSession:
             "prefill_row needs a pre-allocated session (new_session(batch=B))"
         e = self.engine
         tokens = jnp.asarray(prompt, jnp.int32)[None, :]
-        first, st1 = e.strategy.init_state(e.model, e.params, e.sw,
+        pparams, psw = e.prefill_weights()
+        first, st1 = e.strategy.init_state(e.model, pparams, psw,
                                            {"tokens": tokens}, self._max_seq)
         return self._insert_state1(row, st1, tokens.shape[1],
                                    max_new_tokens, eos_token)
@@ -569,7 +603,8 @@ class DecodeSession:
         n = min(C, adm.remaining)
         chunk = np.zeros((1, C), np.int32)
         chunk[0, :n] = adm.tokens[adm.consumed:adm.consumed + n]
-        h, adm.cache = e._extend_jit(e.params, jnp.asarray(chunk), adm.cache,
+        pparams, _ = e.prefill_weights()
+        h, adm.cache = e._extend_jit(pparams, jnp.asarray(chunk), adm.cache,
                                      jnp.int32(n))
         adm.h_parts.append(h[:, :n])
         adm.consumed += n
@@ -581,7 +616,8 @@ class DecodeSession:
         """Last chunk done: first token, draft prefill over the accumulated
         hiddens, batch-1 state assembly, row insert."""
         e = self.engine
-        model, params, sw = e.model, e.params, e.sw
+        model = e.model
+        params, sw = e.prefill_weights()
         tokens = jnp.asarray(adm.tokens, jnp.int32)[None, :]
         h_all = jnp.concatenate(adm.h_parts, axis=1)         # (1, T, D)
         logits = model.logits(params, h_all[:, -1, :])
@@ -625,7 +661,8 @@ class DecodeSession:
             # fault-injection site: fires BEFORE the donating jit call, so
             # the decode state is untouched and the caller may retry
             faultinject.check("dispatch")
-            raw, self._state = e._step_jit(e.params, e.sw, self._state)
+            raw, self._state = e._step_jit(e.params, e.sw, self._state,
+                                           e.qw)
             if self._retired:
                 # compaction is sticky: the uniform len advance of the
                 # batched step must not regrow a retired row's span
@@ -655,7 +692,7 @@ class DecodeSession:
         carry = (self._dev_carry if self._dev_carry is not None
                  else self._carry_from_host())
         out, self._state, carry = e.megatick_jit(K)(e.params, e.sw,
-                                                    self._state, carry)
+                                                    self._state, carry, e.qw)
         self._dev_carry = carry
         handle = MegatickHandle(out=out, carry=carry, num_ticks=K)
         self._async_handles.append(handle)

@@ -79,12 +79,15 @@ class DecodeStrategy:
                                       self.cache_seq_len(model, max_seq),
                                       prng=prng, cache=cache)
 
-    def step(self, model: Model, params, sw, state: eng.DecodeState
-             ) -> Tuple[StepResult, eng.DecodeState]:
+    def step(self, model: Model, params, sw, state: eng.DecodeState,
+             qw=None) -> Tuple[StepResult, eng.DecodeState]:
+        """``qw``: optional quantized-weight bundle
+        (``repro.quant.quantize_params``) threaded into the engine step —
+        a parallel pytree; the original ``params`` stay untouched."""
         raise NotImplementedError
 
     def megatick(self, model: Model, params, sw, state: eng.DecodeState,
-                 limits, num_ticks: int):
+                 limits, num_ticks: int, qw=None):
         """Fuse ``num_ticks`` strategy steps into one device-resident
         ``lax.while_loop`` (``engine.megatick_decode``): per-row budgets, EOS
         cut-off, and the done mask ride in the jitted carry, so host sync
@@ -92,7 +95,7 @@ class DecodeStrategy:
         for every strategy — the adapter below is the only mode-specific
         glue. Returns ``(out dict, new_state, new_limits)``."""
         def tick(st):
-            res, new_st = self.step(model, params, sw, st)
+            res, new_st = self.step(model, params, sw, st, qw=qw)
             return eng.TickEmit(tokens=res.tokens, counts=res.counts,
                                 exit_layer=res.exit_layer,
                                 accept_len=res.accept_len,
@@ -114,10 +117,10 @@ class DenseStrategy(DecodeStrategy):
     name = "dense"
     requires_sw = False
 
-    def step(self, model, params, sw, state):
+    def step(self, model, params, sw, state, qw=None):
         token, new_state, info = eng.dense_decode_step(
             model, params, sw, state, temperature=self.temperature,
-            top_k=self.top_k)
+            top_k=self.top_k, qw=qw)
         return _single_token_result(token, info), new_state
 
 
@@ -132,9 +135,9 @@ class SpecEEStrategy(DecodeStrategy):
     threshold: Optional[float] = None
     name = "specee"
 
-    def step(self, model, params, sw, state):
+    def step(self, model, params, sw, state, qw=None):
         token, new_state, info = eng.ar_decode_step(
-            model, params, sw, state, threshold=self.threshold)
+            model, params, sw, state, threshold=self.threshold, qw=qw)
         return _single_token_result(token, info), new_state
 
 
@@ -175,10 +178,10 @@ class TreeStrategy(DecodeStrategy):
                 "verification); decode with the AR engine instead "
                 "(DESIGN.md §4)")
 
-    def step(self, model, params, sw, state):
+    def step(self, model, params, sw, state, qw=None):
         out, n_emit, new_state, info = eng.tree_decode_step(
             model, params, sw, state, self.tree_for(model),
-            threshold=self.threshold)
+            threshold=self.threshold, qw=qw)
         B = out.shape[0]
         res = StepResult(tokens=out,
                          counts=n_emit.astype(jnp.int32),

@@ -56,6 +56,33 @@ from repro.models.common import Params, lm_head_weight
 from repro.models.model import Model
 
 
+def _apply_qw(params: Params, sw: Optional["SpecEEWeights"], qw):
+    """Resolve one step's weight views under an optional quantized bundle
+    (the ``repro.quant.quantize_params`` output, threaded down from the API
+    layer as an extra jit argument).
+
+    Returns ``(params', lm_w, predictors)``: ``params'`` has quantized
+    projection leaves replaced by dequantized views (weight-only — XLA fuses
+    the dequant into the consuming matmul), ``lm_w`` is the ``QTensor`` LM
+    head when quantized (the exit-gate / spec-head ops dispatch on the type
+    and keep the int tiles resident) else the fp ``lm_head_weight``, and
+    ``predictors`` the quantized bank when present. The original ``params``
+    and ``sw`` pytrees are never touched — the bundle is a parallel tree.
+    """
+    predictors = sw.predictors if sw is not None else None
+    if not qw:
+        return params, lm_head_weight(params), predictors
+    from repro import quant as quant_lib
+    if qw.get("proj") is not None:
+        params = quant_lib.merge_dequant(params, qw["proj"])
+    lm_w = qw.get("lm_head")
+    if lm_w is None:
+        lm_w = lm_head_weight(params)
+    if qw.get("predictors") is not None:
+        predictors = qw["predictors"]
+    return params, lm_w, predictors
+
+
 def _gate_impls(model: Model) -> Tuple[str, bool]:
     """Exit-gate backend selection for a model's flags.
 
@@ -161,17 +188,19 @@ def empty_decode_state(model: Model, sw: Optional[SpecEEWeights], batch: int,
 def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                    state: DecodeState,
                    threshold: Optional[float] = None,
-                   spec_ids_override: Optional[jnp.ndarray] = None
+                   spec_ids_override: Optional[jnp.ndarray] = None,
+                   qw=None
                    ) -> Tuple[jnp.ndarray, DecodeState, StepInfo]:
     """Decode one token for every row with speculative early exiting.
 
     spec_ids_override: (B, k) — oracle speculative set for tests/upper-bound
     benchmarks (bypasses the draft proposal, draft cache still maintained).
+    qw: optional quantized-weight bundle (``repro.quant.quantize_params``).
     """
     spec = model.run.specee
     thresh = spec.exit_threshold if threshold is None else threshold
     E = model.num_exit_points
-    lm_w = lm_head_weight(params)
+    params, lm_w, predictors = _apply_qw(params, sw, qw)
     pos = state.cache["len"]
     B = state.last_token.shape[0]
     k = spec.num_speculative
@@ -183,7 +212,8 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     emb = model.embed(params, state.last_token[:, None])[:, 0, :]
     h_draft, draft_cache = draft_lib.draft_step(
         model.cfg, sw.draft, emb, state.h_last, state.draft_cache, pos)
-    spec_ids, _ = draft_lib.propose_topk(model, params, h_draft, k)
+    spec_ids, _ = draft_lib.propose_topk(model, params, h_draft, k,
+                                         lm_w=lm_w)
     if spec_ids_override is not None:
         spec_ids = spec_ids_override
 
@@ -223,7 +253,7 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                 # single exit-gate entry point: spec-head features +
                 # predictor fused ("kernel"/"xla") or the four-op reference
                 p_exit, probs, _ = gate_lib.exit_gate(
-                    hn, lm_w, spec_ids, prev_probs, sw.predictors, ep,
+                    hn, lm_w, spec_ids, prev_probs, predictors, ep,
                     impl=gate_impl, spec_head_kernel=sh_kernel)
                 would = act & (p_exit > thresh)
 
@@ -349,7 +379,8 @@ def build_tree(model: Model, params: Params, sw: SpecEEWeights,
 def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                      state: DecodeState, tree,
                      threshold: Optional[float] = None,
-                     node_tokens_override: Optional[jnp.ndarray] = None
+                     node_tokens_override: Optional[jnp.ndarray] = None,
+                     qw=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, DecodeState,
                                 TreeStepInfo]:
     """One tree-speculative step with hyper-token merged early exit.
@@ -363,7 +394,7 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     spec = model.run.specee
     thresh = spec.exit_threshold if threshold is None else threshold
     E = model.num_exit_points
-    lm_w = lm_head_weight(params)
+    params, lm_w, predictors = _apply_qw(params, sw, qw)
     B = state.last_token.shape[0]
     N = tree.num_nodes
     k = spec.num_speculative
@@ -439,7 +470,7 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                     feats, probs, path_nodes,
                     jnp.full((path_nodes.shape[0],), path_nodes.shape[1]))
                 p_exit = pred_lib.apply_predictor_banked(
-                    sw.predictors, ep, pf,
+                    predictors, ep, pf,
                     use_kernel=pred_kernel)                    # (B, P)
                 fire = jnp.max(p_exit, axis=1) > thresh     # best path fires
                 newly = act & fire
@@ -662,7 +693,8 @@ def init_tree_decode_state(model: Model, params: Params, sw: SpecEEWeights,
 # ---------------------------------------------------------------------------
 def dense_decode_step(model: Model, params: Params,
                       sw: Optional[SpecEEWeights], state: DecodeState,
-                      temperature: float = 0.0, top_k: Optional[int] = None
+                      temperature: float = 0.0, top_k: Optional[int] = None,
+                      qw=None
                       ) -> Tuple[jnp.ndarray, DecodeState, StepInfo]:
     """One dense (full-depth) decode step.
 
@@ -676,7 +708,13 @@ def dense_decode_step(model: Model, params: Params,
     decode history: batch- and slot-independent, megatick-invariant, and
     exactly reproducible when an evicted row replays its prefix through the
     fault-recovery path (DESIGN.md §7). ``state.prng`` stays constant.
+
+    With a quantized bundle (``qw``) the greedy path verifies against the
+    quantized head; the sampling path keeps the fp LM head (the distribution
+    is the product, not just its argmax) while still using dequantized
+    projections.
     """
+    params, lm_w, _ = _apply_qw(params, sw, qw)
     pos_before = state.cache["len"]
     h, cache = model.decode_step_hidden(params, state.last_token, state.cache)
     if temperature > 0.0:
@@ -690,8 +728,7 @@ def dense_decode_step(model: Model, params: Params,
         prng = state.prng
         gate_impl, _ = _gate_impls(model)
         token, _ = gate_lib.verify_argmax(model.final_norm(params, h),
-                                          lm_head_weight(params),
-                                          impl=gate_impl)
+                                          lm_w, impl=gate_impl)
     B = token.shape[0]
     E = model.num_exit_points
     new_state = DecodeState(cache=cache, draft_cache=state.draft_cache,

@@ -25,20 +25,27 @@ import jax.numpy as jnp
 from repro.models.common import Params, lm_head_weight
 
 
-def spec_logits_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
+def spec_logits_ref(hn: jnp.ndarray, lm_head,
                     spec_ids: jnp.ndarray) -> jnp.ndarray:
-    """hn: (B, D) final-normed hidden; lm_head: (D, V); spec_ids: (B, k).
+    """hn: (B, D) final-normed hidden; lm_head: (D, V) array or a quantized
+    ``repro.quant.QTensor``; spec_ids: (B, k).
 
     Returns (B, k) fp32 logits — reference implementation of the speculative
-    LM head (columns of the LM head gathered per row).
+    LM head (columns of the LM head gathered per row). For a quantized head
+    the columns are gathered then dequantized — identical to dequantizing
+    first because the scales are per-output-column.
     """
-    cols = jnp.take(lm_head, spec_ids, axis=1)        # (D, B, k)
+    if hasattr(lm_head, "bits"):                      # QTensor
+        from repro.quant import take_columns
+        cols = take_columns(lm_head, spec_ids)        # (D, B, k) fp32
+    else:
+        cols = jnp.take(lm_head, spec_ids, axis=1)    # (D, B, k)
     cols = jnp.moveaxis(cols, 1, 0)                   # (B, D, k)
     return jnp.einsum("bd,bdk->bk", hn.astype(jnp.float32),
                       cols.astype(jnp.float32))
 
 
-def extract_features(hn: jnp.ndarray, lm_head: jnp.ndarray,
+def extract_features(hn: jnp.ndarray, lm_head,
                      spec_ids: jnp.ndarray, prev_probs: jnp.ndarray,
                      use_kernel: bool = False
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -44,11 +44,19 @@ def init_predictors(spec: SpecEEConfig, num_exit_points: int, key) -> Params:
 
 
 def apply_predictor(p: Params, features: jnp.ndarray) -> jnp.ndarray:
-    """features: (..., feature_dim) -> exit probability (...,) in [0, 1]."""
+    """features: (..., feature_dim) -> exit probability (...,) in [0, 1].
+
+    Quantized banks (``repro.quant.QTensor`` weight leaves) are dequantized
+    in place — this is the reference path the fused quantized MLP kernel is
+    tested against.
+    """
     x = features.astype(jnp.float32)
     layers = p["layers"]
     for i, layer in enumerate(layers):
-        x = x @ layer["w"] + layer["b"]
+        w = layer["w"]
+        if hasattr(w, "dequantize"):
+            w = w.dequantize()
+        x = x @ w + layer["b"]
         if i + 1 < len(layers):
             x = jax.nn.relu(x)
     return jax.nn.sigmoid(x[..., 0])

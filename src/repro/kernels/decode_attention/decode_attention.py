@@ -29,7 +29,8 @@ NEG_INF = -1e30
 
 def _online_softmax_step(ki, clen, k_start, q_ref, k_ref, v_ref, o_ref,
                          m_scr, l_scr, acc_scr, *, scale: float,
-                         block_k: int, window: Optional[int], nk: int):
+                         block_k: int, window: Optional[int], nk: int,
+                         ks_ref=None, vs_ref=None):
     """Shared flash-decoding tile body for the dense and paged kernels.
 
     The two kernels differ ONLY in how a grid step locates its K/V block
@@ -37,6 +38,12 @@ def _online_softmax_step(ki, clen, k_start, q_ref, k_ref, v_ref, o_ref,
     decision (masking, NEG_INF, online-softmax accumulation, the l == 0
     guard for fully-masked rows) lives here exactly once. ``k_start`` is the
     LOGICAL position of the block's first key.
+
+    ``ks_ref``/``vs_ref``: optional per-(position, head) int8 dequant scales
+    (``ModelFlags.kv_quant`` pools) as (Bk, 1) tiles; when present the K/V
+    tiles are int8 codes and dequant happens here, in-register — the same
+    per-position scales ``model._kv_dequantize`` applies to the gathered
+    view, so dequant∘gather ≡ gather∘dequant holds bit-for-bit.
     """
     @pl.when(ki == 0)
     def _init():
@@ -52,6 +59,10 @@ def _online_softmax_step(ki, clen, k_start, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)                 # (n_rep, hd)
         k = k_ref[0, 0].astype(jnp.float32)                 # (Bk, hd)
         v = v_ref[0, 0].astype(jnp.float32)                 # (Bk, hd)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0].astype(jnp.float32)        # (Bk, 1) scales
+        if vs_ref is not None:
+            v = v * vs_ref[0, 0].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         valid = kpos < clen
@@ -159,15 +170,38 @@ def _paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
                          block_k=page_size, window=window, nk=npg)
 
 
+def _paged_kernel_q(len_ref, tbl_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                    o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                    page_size: int, window: Optional[int], npg: int):
+    # int8 pools (ModelFlags.kv_quant): same tile math, but the K/V pages
+    # arrive as int8 codes + per-(position, head) scale pages gathered
+    # through the SAME page-table index map — dequant runs in-register
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    _online_softmax_step(pi, len_ref[b], pi * page_size, q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, scale=scale,
+                         block_k=page_size, window=window, nk=npg,
+                         ks_ref=ks_ref, vs_ref=vs_ref)
+
+
 def paged_decode_attention_fwd(q: jnp.ndarray, k_pool: jnp.ndarray,
                                v_pool: jnp.ndarray, page_table: jnp.ndarray,
-                               cache_len,
-                               window: Optional[int] = None) -> jnp.ndarray:
+                               cache_len, window: Optional[int] = None,
+                               k_scale: Optional[jnp.ndarray] = None,
+                               v_scale: Optional[jnp.ndarray] = None
+                               ) -> jnp.ndarray:
     """Split-KV decode attention reading K/V through a page table.
 
     q: (B, 1, H, hd); k_pool/v_pool: (n_pages, page_size, KVH, hd) — the
     shared physical pool; page_table: (B, P) int32 logical→physical page map;
     cache_len: scalar or (B,) valid logical length per row.
+
+    ``k_scale``/``v_scale``: optional (n_pages, page_size, KVH) fp32 dequant
+    scale pools for int8 K/V pools (``ModelFlags.kv_quant``). Scale pages
+    ride the SAME page-table index map as their value pages, so the kernel
+    reads ~4× fewer K/V bytes per page and the dequantized math is
+    bit-identical to dequantizing the gathered logical view (per-position
+    scales commute with the gather).
 
     The page table is scalar-prefetched and consumed by the K/V BlockSpec
     index maps, so each grid step DMAs exactly one physical page — the
@@ -183,6 +217,7 @@ def paged_decode_attention_fwd(q: jnp.ndarray, k_pool: jnp.ndarray,
     n_rep = H // KVH
     P = page_table.shape[1]
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
 
     clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
     tbl = jnp.asarray(page_table, jnp.int32)
@@ -191,8 +226,6 @@ def paged_decode_attention_fwd(q: jnp.ndarray, k_pool: jnp.ndarray,
     vt = jnp.moveaxis(v_pool, 2, 1)
 
     from repro.kernels import interpret_default, tpu_compiler_params
-    kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
-                               window=window, npg=P)
 
     def kv_page(b, g, pi, lens, tbl):
         # pages beyond the valid prefix are dead (pl.when masks compute);
@@ -201,15 +234,31 @@ def paged_decode_attention_fwd(q: jnp.ndarray, k_pool: jnp.ndarray,
         last_live = jnp.maximum((lens[b] + ps - 1) // ps - 1, 0)
         return (tbl[b, jnp.minimum(pi, last_live)], g, 0, 0)
 
+    q_spec = pl.BlockSpec((1, 1, n_rep, hd),
+                          lambda b, g, pi, lens, tbl: (b, g, 0, 0))
+    kv_spec = pl.BlockSpec((1, 1, ps, hd), kv_page)
+    if quantized:
+        kernel = functools.partial(_paged_kernel_q, scale=scale,
+                                   page_size=ps, window=window, npg=P)
+        # (NP, ps, KVH) -> (NP, KVH, ps, 1): scale pages under the value
+        # pages' index map, broadcasting over hd inside the tile
+        kst = jnp.moveaxis(k_scale, 2, 1).reshape(n_pages, KVH, ps, 1)
+        vst = jnp.moveaxis(v_scale, 2, 1).reshape(n_pages, KVH, ps, 1)
+        s_spec = pl.BlockSpec((1, 1, ps, 1), kv_page)
+        in_specs = [q_spec, kv_spec, s_spec, kv_spec, s_spec]
+        operands = (clen, tbl, qg, kt, kst, vt, vst)
+        name = "specee_paged_decode_attention_q8"
+    else:
+        kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
+                                   window=window, npg=P)
+        in_specs = [q_spec, kv_spec, kv_spec]
+        operands = (clen, tbl, qg, kt, vt)
+        name = "specee_paged_decode_attention"
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KVH, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, n_rep, hd),
-                         lambda b, g, pi, lens, tbl: (b, g, 0, 0)),
-            pl.BlockSpec((1, 1, ps, hd), kv_page),
-            pl.BlockSpec((1, 1, ps, hd), kv_page),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, n_rep, hd),
                                lambda b, g, pi, lens, tbl: (b, g, 0, 0)),
         scratch_shapes=[
@@ -225,8 +274,8 @@ def paged_decode_attention_fwd(q: jnp.ndarray, k_pool: jnp.ndarray,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret_default(),
-        name="specee_paged_decode_attention",
+        name=name,
     )
-    out = fn(clen, tbl, qg, kt, vt)
+    out = fn(*operands)
     out = out.reshape(B, KVH * n_rep, hd)
     return out[:, None].reshape(B, 1, H, hd)

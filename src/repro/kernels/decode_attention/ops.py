@@ -29,15 +29,24 @@ def decode_attention(cfg, q, k_cache, v_cache, cache_len,
 @partial(jax.jit, static_argnames=("window",))
 def paged_decode_attention_raw(q: jnp.ndarray, k_pool: jnp.ndarray,
                                v_pool: jnp.ndarray, page_table: jnp.ndarray,
-                               cache_len,
-                               window: Optional[int] = None) -> jnp.ndarray:
+                               cache_len, window: Optional[int] = None,
+                               k_scale: Optional[jnp.ndarray] = None,
+                               v_scale: Optional[jnp.ndarray] = None
+                               ) -> jnp.ndarray:
     return paged_decode_attention_fwd(q, k_pool, v_pool, page_table,
-                                      cache_len, window=window)
+                                      cache_len, window=window,
+                                      k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_decode_attention(cfg, q, k_pool, v_pool, page_table, cache_len,
-                           window: Optional[int] = None) -> jnp.ndarray:
+                           window: Optional[int] = None,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None
+                           ) -> jnp.ndarray:
     """Model-layer adapter: page-table-aware gather variant consumed by the
-    paged decode path (``model._block_step`` under ``flags.decode_kernel``)."""
+    paged decode path (``model._block_step`` under ``flags.decode_kernel``).
+    ``k_scale``/``v_scale`` carry the int8 dequant scale pools under
+    ``flags.kv_quant`` (same page-table gather as the value pools)."""
     return paged_decode_attention_raw(q, k_pool, v_pool, page_table,
-                                      cache_len, window=window)
+                                      cache_len, window=window,
+                                      k_scale=k_scale, v_scale=v_scale)

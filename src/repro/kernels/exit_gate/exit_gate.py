@@ -348,3 +348,313 @@ def topk_verify_fused(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
     )
     ids, vals = fn(hn, lm_head)
     return ids, vals
+
+
+# ---------------------------------------------------------------------------
+# quantized verify: int8 / packed-int4 LM head, dequant fused into the tile
+# ---------------------------------------------------------------------------
+# The quantized kernels stream integer weight tiles plus a (1, block_v)
+# per-column scale strip and fold the dequant into the accumulation:
+# because the scale is constant down the contracted D axis,
+# dot(h, q*s) == dot(h, q) * s, so each tile issues ONE integer-fed fp32
+# matmul and a vector multiply — the fp weight never exists, in HBM or
+# VMEM. int4 uses the plane packing from repro.quant: the packed (D/2, V)
+# byte matrix holds row i in the low nibble and row i + D/2 in the high
+# nibble, and the kernel receives the SAME hidden-state operand twice under
+# two index maps (blocks d and d + nd) so the two planes contract against
+# their own halves of h without any in-kernel interleave.
+
+def _unpack_nibbles(p):
+    """int8 packed tile -> (lo, hi) int32 sign-extended nibble planes."""
+    p = p.astype(jnp.int32)
+    return (p << 28) >> 28, p >> 4
+
+
+def _fold_argmax(v, tile, best_ref, barg_ref, *, V, block_v):
+    """Fold a finished (1, Vt) logits tile into the SMEM running argmax."""
+    col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    vals = jnp.where(col < V, tile, NEG_INF)
+    tmax = jnp.max(vals)
+    targ = v * block_v + jnp.argmax(vals[0, :]).astype(jnp.int32)
+    better = tmax > best_ref[0, 0]
+    barg_ref[0, 0] = jnp.where(better, targ, barg_ref[0, 0])
+    best_ref[0, 0] = jnp.where(better, tmax, best_ref[0, 0])
+
+
+def _fold_topk(v, tile, run_v_ref, run_i_ref, *, V, k, block_v):
+    """Fold a finished (1, Vt) logits tile into the running (1, k) top-k."""
+    col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    tile_v = jnp.where(col < V, tile, NEG_INF)
+    pool_v = jnp.concatenate([run_v_ref[...], tile_v], axis=1)
+    pool_i = jnp.concatenate([run_i_ref[...], col], axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, pool_v.shape, 1)
+    new_v = jnp.full((1, k), NEG_INF, jnp.float32)
+    new_i = jnp.zeros((1, k), jnp.int32)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    for j in range(k):
+        best = jnp.max(pool_v)
+        arg = jnp.argmax(pool_v[0, :]).astype(jnp.int32)
+        new_v = jnp.where(slot == j, best, new_v)
+        new_i = jnp.where(slot == j, pool_i[0, arg], new_i)
+        pool_v = jnp.where(lane == arg, NEG_INF, pool_v)
+    run_v_ref[...] = new_v
+    run_i_ref[...] = new_i
+
+
+def _verify_kernel_q8(h_ref, w_ref, s_ref, tok_ref, max_ref, acc_ref,
+                      best_ref, barg_ref, *, V, block_v, nv, nd):
+    v = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((v == 0) & (d == 0))
+    def _init_row():
+        best_ref[0, 0] = NEG_INF
+        barg_ref[0, 0] = 0
+
+    h = h_ref[...].astype(jnp.float32)                    # (1, Dt)
+    w = w_ref[...].astype(jnp.float32)                    # (Dt, Vt) int8->f32
+    s = s_ref[...]                                        # (1, Vt)
+    acc_ref[...] += jnp.dot(h, w, preferred_element_type=jnp.float32) * s
+
+    @pl.when(d == nd - 1)
+    def _fold_tile():
+        _fold_argmax(v, acc_ref[...], best_ref, barg_ref, V=V,
+                     block_v=block_v)
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            tok_ref[...] = jnp.full((1, 1), barg_ref[0, 0], jnp.int32)
+            max_ref[...] = jnp.full((1, 1), best_ref[0, 0], jnp.float32)
+
+
+def _verify_kernel_q4(hlo_ref, hhi_ref, w_ref, s_ref, tok_ref, max_ref,
+                      acc_ref, best_ref, barg_ref, *, V, block_v, nv, nd):
+    v = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((v == 0) & (d == 0))
+    def _init_row():
+        best_ref[0, 0] = NEG_INF
+        barg_ref[0, 0] = 0
+
+    h_lo = hlo_ref[...].astype(jnp.float32)               # (1, Dt) rows d
+    h_hi = hhi_ref[...].astype(jnp.float32)               # (1, Dt) rows d+D/2
+    lo, hi = _unpack_nibbles(w_ref[...])                  # (Dt, Vt) planes
+    s = s_ref[...]                                        # (1, Vt)
+    part = (jnp.dot(h_lo, lo.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            + jnp.dot(h_hi, hi.astype(jnp.float32),
+                      preferred_element_type=jnp.float32))
+    acc_ref[...] += part * s
+
+    @pl.when(d == nd - 1)
+    def _fold_tile():
+        _fold_argmax(v, acc_ref[...], best_ref, barg_ref, V=V,
+                     block_v=block_v)
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            tok_ref[...] = jnp.full((1, 1), barg_ref[0, 0], jnp.int32)
+            max_ref[...] = jnp.full((1, 1), best_ref[0, 0], jnp.float32)
+
+
+def _topk_kernel_q8(h_ref, w_ref, s_ref, ids_ref, vals_ref, acc_ref,
+                    run_v_ref, run_i_ref, *, V, k, block_v, nv, nd):
+    v = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((v == 0) & (d == 0))
+    def _init_row():
+        run_v_ref[...] = jnp.full_like(run_v_ref, NEG_INF)
+        run_i_ref[...] = jnp.zeros_like(run_i_ref)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += (jnp.dot(h, w, preferred_element_type=jnp.float32)
+                     * s_ref[...])
+
+    @pl.when(d == nd - 1)
+    def _fold_tile():
+        _fold_topk(v, acc_ref[...], run_v_ref, run_i_ref, V=V, k=k,
+                   block_v=block_v)
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            ids_ref[...] = run_i_ref[...]
+            vals_ref[...] = run_v_ref[...]
+
+
+def _topk_kernel_q4(hlo_ref, hhi_ref, w_ref, s_ref, ids_ref, vals_ref,
+                    acc_ref, run_v_ref, run_i_ref, *, V, k, block_v, nv, nd):
+    v = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((v == 0) & (d == 0))
+    def _init_row():
+        run_v_ref[...] = jnp.full_like(run_v_ref, NEG_INF)
+        run_i_ref[...] = jnp.zeros_like(run_i_ref)
+
+    h_lo = hlo_ref[...].astype(jnp.float32)
+    h_hi = hhi_ref[...].astype(jnp.float32)
+    lo, hi = _unpack_nibbles(w_ref[...])
+    part = (jnp.dot(h_lo, lo.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            + jnp.dot(h_hi, hi.astype(jnp.float32),
+                      preferred_element_type=jnp.float32))
+    acc_ref[...] += part * s_ref[...]
+
+    @pl.when(d == nd - 1)
+    def _fold_tile():
+        _fold_topk(v, acc_ref[...], run_v_ref, run_i_ref, V=V, k=k,
+                   block_v=block_v)
+
+        @pl.when(v == nv - 1)
+        def _emit():
+            ids_ref[...] = run_i_ref[...]
+            vals_ref[...] = run_v_ref[...]
+
+
+def _q_verify_plan(hn, qt, block_v, block_d):
+    """Shared launch geometry for the quantized verify/topk kernels.
+
+    Returns (operands, in_specs, grid, block_v, V) where operands already
+    carry any vocab padding (int8 zero columns + zero scales — masked to
+    NEG_INF by the fold, exactly like the fp kernels' pad path).
+    """
+    B, D = hn.shape
+    q = qt.q
+    V = q.shape[-1]
+    scale = qt.scale.reshape(1, V)
+    if qt.bits == 4:
+        assert q.shape[0] * 2 == D, (q.shape, D)
+        block_d = _fit_block(q.shape[0], block_d)
+        nd = q.shape[0] // block_d
+    else:
+        assert q.shape[0] == D, (q.shape, D)
+        block_d = _fit_block(D, block_d)
+        nd = D // block_d
+    block_v, pad_v = _pick_vocab_block(V, block_v)
+    if pad_v:
+        q = jnp.pad(q, ((0, 0), (0, pad_v)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_v)))
+    nv = (V + pad_v) // block_v
+
+    w_spec = pl.BlockSpec((block_d, block_v), lambda b, v, d: (d, v))
+    s_spec = pl.BlockSpec((1, block_v), lambda b, v, d: (0, v))
+    if qt.bits == 4:
+        # the SAME hn operand twice: plane-packed halves contract against
+        # h[:, :D/2] (block d) and h[:, D/2:] (block d + nd)
+        in_specs = [
+            pl.BlockSpec((1, block_d), lambda b, v, d: (b, d)),
+            pl.BlockSpec((1, block_d), lambda b, v, d, nd=nd: (b, d + nd)),
+            w_spec, s_spec,
+        ]
+        operands = (hn, hn, q, scale)
+    else:
+        in_specs = [pl.BlockSpec((1, block_d), lambda b, v, d: (b, d)),
+                    w_spec, s_spec]
+        operands = (hn, q, scale)
+    return operands, in_specs, (B, nv, nd), (block_v, nv, nd), V
+
+
+def argmax_verify_fused_q(hn: jnp.ndarray, qt, block_v: int = 512,
+                          block_d: int = 512
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized-LM-head streaming argmax. hn: (B, D); qt: QTensor whose
+    logical shape is (D, V). Numerics: identical to running
+    ``argmax_verify_fused(hn, qt.dequantize())`` (fp32 accumulation, scale
+    folded after the tile dot — exact because scales are per-column).
+    """
+    B = hn.shape[0]
+    operands, in_specs, grid, (block_v, nv, nd), V = _q_verify_plan(
+        hn, qt, block_v, block_d)
+    kernel = _verify_kernel_q4 if qt.bits == 4 else _verify_kernel_q8
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, v, d: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, v, d: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_v), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.int32),
+        ],
+    )
+    from repro.kernels import interpret_default, tpu_compiler_params
+    fn = pl.pallas_call(
+        functools.partial(kernel, V=V, block_v=block_v, nv=nv, nd=nd),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret_default(),
+        name=f"specee_argmax_verify_q{qt.bits}",
+    )
+    tok, mx = fn(*operands)
+    return tok[:, 0], mx[:, 0]
+
+
+def topk_verify_fused_q(hn: jnp.ndarray, qt, k: int, block_v: int = 512,
+                        block_d: int = 512
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized-LM-head streaming top-k (draft proposal path). Same
+    ordering contract as ``topk_verify_fused`` on the dequantized head.
+    """
+    B = hn.shape[0]
+    operands, in_specs, grid, (block_v, nv, nd), V = _q_verify_plan(
+        hn, qt, block_v, block_d)
+    assert k <= min(qt.shape[-1], block_v), (k, qt.shape, block_v)
+    kernel = _topk_kernel_q4 if qt.bits == 4 else _topk_kernel_q8
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, v, d: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, v, d: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_v), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+    )
+    from repro.kernels import interpret_default, tpu_compiler_params
+    fn = pl.pallas_call(
+        functools.partial(kernel, V=V, k=k, block_v=block_v, nv=nv, nd=nd),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret_default(),
+        name=f"specee_topk_verify_q{qt.bits}",
+    )
+    ids, vals = fn(*operands)
+    return ids, vals

@@ -35,7 +35,10 @@ from repro.kernels import on_tpu
 from repro.kernels.exit_gate import ref as gate_ref
 from repro.kernels.exit_gate import tuning
 from repro.kernels.exit_gate.exit_gate import (argmax_verify_fused,
-                                               exit_gate_fused)
+                                               argmax_verify_fused_q,
+                                               exit_gate_fused,
+                                               topk_verify_fused_q)
+from repro.quant import QTensor, unpack_int4
 
 IMPLS = (None, "auto", "kernel", "xla", "ref")
 
@@ -73,7 +76,7 @@ def _index_bank(predictors, ep):
 
 
 @partial(jax.jit, static_argnames=("impl", "spec_head_kernel", "block_d"))
-def exit_gate(hn: jnp.ndarray, lm_head: jnp.ndarray, spec_ids: jnp.ndarray,
+def exit_gate(hn: jnp.ndarray, lm_head, spec_ids: jnp.ndarray,
               prev_probs: jnp.ndarray, predictors, ep: jnp.ndarray,
               impl: Optional[str] = None, spec_head_kernel: bool = False,
               block_d: int = 512
@@ -89,6 +92,19 @@ def exit_gate(hn: jnp.ndarray, lm_head: jnp.ndarray, spec_ids: jnp.ndarray,
     impl = _resolve(impl)
     pp = _index_bank(predictors, ep)
     layers = pp["layers"]
+    quantized = (isinstance(lm_head, QTensor)
+                 or any(isinstance(l.get("w"), QTensor) for l in layers))
+    if impl == "kernel" and len(layers) == 2 and quantized:
+        # piecewise fusion for quantized weights (mirrors the tree gate):
+        # the quantized spec-head gather kernel + the quantized fused MLP —
+        # features still make exactly one VMEM round-trip each
+        from repro.kernels.predictor_mlp import ops as pm_ops
+        from repro.kernels.spec_head import ops as sh_ops
+        logits, probs = sh_ops.spec_head(hn, lm_head, spec_ids,
+                                         block_d=block_d)
+        feats = jnp.concatenate(
+            [logits, probs, probs - prev_probs.astype(jnp.float32)], axis=-1)
+        return pm_ops.predictor_mlp(feats, pp), probs, logits
     if impl == "kernel" and len(layers) == 2:
         return exit_gate_fused(hn, lm_head, spec_ids, prev_probs,
                                layers[0]["w"], layers[0]["b"],
@@ -139,8 +155,89 @@ def _verify_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray,
     return barg, best
 
 
+def _q_stream_plan(hn: jnp.ndarray, qt: QTensor, block_v: int):
+    """Shared tile geometry + per-tile dequantized-logits fn for the
+    quantized streaming-XLA paths. Mirrors the quantized kernels: integer
+    codes + per-column scales stream per tile; the scale folds in after
+    the dot (exact — scales are column-constant)."""
+    from repro.kernels.exit_gate.exit_gate import _pick_vocab_block
+    V = qt.q.shape[-1]
+    block_v, pad_v = _pick_vocab_block(V, block_v)
+    q = qt.q
+    scale = qt.scale
+    if pad_v:
+        q = jnp.pad(q, ((0, 0), (0, pad_v)))
+        scale = jnp.pad(scale, (0, pad_v))
+    nv = (V + pad_v) // block_v
+    hf = hn.astype(jnp.float32)
+    half = q.shape[0]        # = D/2 for the packed int4 plane layout
+    bits = qt.bits
+
+    def tile_logits(v):
+        qt_tile = jax.lax.dynamic_slice_in_dim(q, v * block_v, block_v,
+                                               axis=1)
+        s_tile = jax.lax.dynamic_slice_in_dim(scale, v * block_v, block_v,
+                                              axis=0)
+        if bits == 4:
+            lo, hi = unpack_int4(qt_tile)
+            part = (hf[:, :half] @ lo.astype(jnp.float32)
+                    + hf[:, half:] @ hi.astype(jnp.float32))
+        else:
+            part = hf @ qt_tile.astype(jnp.float32)
+        return part * s_tile[None, :]                   # (B, Vt)
+
+    return tile_logits, block_v, nv, V
+
+
+def _verify_streaming_xla_q(hn: jnp.ndarray, qt: QTensor,
+                            block_v: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized sibling of ``_verify_streaming_xla``."""
+    B = hn.shape[0]
+    tile_logits, block_v, nv, V = _q_stream_plan(hn, qt, block_v)
+    lanes = jnp.arange(block_v)
+
+    def body(carry, v):
+        best, barg = carry
+        col = v * block_v + lanes
+        tile = jnp.where(col[None, :] < V, tile_logits(v), -jnp.inf)
+        tmax = jnp.max(tile, axis=-1)
+        targ = (v * block_v + jnp.argmax(tile, axis=-1)).astype(jnp.int32)
+        better = tmax > best
+        return (jnp.where(better, tmax, best),
+                jnp.where(better, targ, barg)), None
+
+    init = (jnp.full((B,), -jnp.inf, jnp.float32),
+            jnp.zeros((B,), jnp.int32))
+    (best, barg), _ = jax.lax.scan(body, init, jnp.arange(nv))
+    return barg, best
+
+
+def _topk_streaming_xla_q(hn: jnp.ndarray, qt: QTensor, k: int,
+                          block_v: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized sibling of ``_topk_streaming_xla`` (same tie contract)."""
+    B = hn.shape[0]
+    tile_logits, block_v, nv, V = _q_stream_plan(hn, qt, block_v)
+    lanes = jnp.arange(block_v)
+
+    def body(carry, v):
+        cvals, cids = carry
+        col = v * block_v + lanes
+        tile = jnp.where(col[None, :] < V, tile_logits(v), -jnp.inf)
+        pool_v = jnp.concatenate([cvals, tile], axis=1)
+        pool_i = jnp.concatenate(
+            [cids, jnp.broadcast_to(col[None, :], tile.shape)], axis=1)
+        nvals, sel = jax.lax.top_k(pool_v, k)
+        nids = jnp.take_along_axis(pool_i, sel, axis=1)
+        return (nvals, nids.astype(jnp.int32)), None
+
+    init = (jnp.full((B, k), -jnp.inf, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+    (vals, ids), _ = jax.lax.scan(body, init, jnp.arange(nv))
+    return ids, vals
+
+
 @partial(jax.jit, static_argnames=("impl", "block_v", "block_d"))
-def verify_argmax(hn: jnp.ndarray, lm_head: jnp.ndarray,
+def verify_argmax(hn: jnp.ndarray, lm_head,
                   impl: Optional[str] = None, block_v: Optional[int] = None,
                   block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-LM-head argmax for verification. hn: (B, D); lm_head: (D, V).
@@ -156,6 +253,17 @@ def verify_argmax(hn: jnp.ndarray, lm_head: jnp.ndarray,
     Returns (token (B,) int32, max logit (B,) fp32).
     """
     impl = _resolve(impl, cpu_default="ref")
+    if isinstance(lm_head, QTensor):
+        if block_v is None:
+            block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[-1],
+                                          wbits=lm_head.bits)
+        if impl == "kernel":
+            return argmax_verify_fused_q(hn, lm_head, block_v=block_v,
+                                         block_d=block_d)
+        if impl == "xla":
+            return _verify_streaming_xla_q(hn, lm_head, block_v)
+        return gate_ref.verify_argmax_ref(hn, lm_head,
+                                          compute_dtype=hn.dtype)
     if block_v is None:
         block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[1])
     if impl == "kernel":
@@ -203,7 +311,7 @@ def _topk_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
 
 
 @partial(jax.jit, static_argnames=("k", "impl", "block_v", "block_d"))
-def verify_topk(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
+def verify_topk(hn: jnp.ndarray, lm_head, k: int,
                 impl: Optional[str] = None, block_v: Optional[int] = None,
                 block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-LM-head top-k — the streaming sibling of ``verify_argmax`` for
@@ -218,6 +326,17 @@ def verify_topk(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
     Returns (ids (B, k) int32, vals (B, k) fp32), descending by logit.
     """
     impl = _resolve(impl, cpu_default="ref")
+    if isinstance(lm_head, QTensor):
+        if block_v is None:
+            block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[-1],
+                                          wbits=lm_head.bits)
+        if impl == "kernel":
+            return topk_verify_fused_q(hn, lm_head, k, block_v=block_v,
+                                       block_d=block_d)
+        if impl == "xla":
+            return _topk_streaming_xla_q(hn, lm_head, k, block_v)
+        return gate_ref.verify_topk_ref(hn, lm_head, k,
+                                        compute_dtype=hn.dtype)
     if block_v is None:
         block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[1])
     if impl == "kernel":

@@ -34,31 +34,44 @@ def exit_gate_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
     return apply_predictor(predictor, feats), probs, logits
 
 
-def verify_argmax_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
+def _materialize(lm_head):
+    """Dequantize a QTensor head — the quantized paths' numerics oracle."""
+    from repro.quant import QTensor
+    if isinstance(lm_head, QTensor):
+        return lm_head.dequantize()
+    return lm_head
+
+
+def verify_argmax_ref(hn: jnp.ndarray, lm_head,
                       compute_dtype: Optional[jnp.dtype] = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-head argmax via materialized (B, V) logits.
 
     compute_dtype=None accumulates in fp32 (the kernel's contract);
-    compute_dtype=hn.dtype is the engine's historical behaviour.
+    compute_dtype=hn.dtype is the engine's historical behaviour. A
+    ``repro.quant.QTensor`` head is dequantized first — this IS the
+    bit-exactness oracle the fused quantized kernels are tested against.
     Returns (token (B,) int32, max logit (B,) fp32).
     """
+    lm_head = _materialize(lm_head)
     dt = jnp.float32 if compute_dtype is None else compute_dtype
     logits = (hn.astype(dt) @ lm_head.astype(dt)).astype(jnp.float32)
     return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
             jnp.max(logits, axis=-1))
 
 
-def verify_topk_ref(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
+def verify_topk_ref(hn: jnp.ndarray, lm_head, k: int,
                     compute_dtype: Optional[jnp.dtype] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-head top-k via materialized (B, V) logits (``jax.lax.top_k``).
 
     compute_dtype=None accumulates in fp32 (the kernel's contract);
     compute_dtype=hn.dtype is ``propose_topk``'s historical behaviour
-    (``model.logits`` matmuls in the activation dtype).
+    (``model.logits`` matmuls in the activation dtype). QTensor heads are
+    dequantized first (quantized-kernel oracle).
     Returns (ids (B, k) int32, vals (B, k) fp32).
     """
+    lm_head = _materialize(lm_head)
     dt = jnp.float32 if compute_dtype is None else compute_dtype
     logits = (hn.astype(dt) @ lm_head.astype(dt)).astype(jnp.float32)
     vals, ids = jax.lax.top_k(logits, k)

@@ -48,13 +48,16 @@ def reload_table() -> None:
     _table.cache_clear()
 
 
-def best_block_v(d_model: int, vocab: int,
-                 backend: Optional[str] = None) -> int:
+def best_block_v(d_model: int, vocab: int, backend: Optional[str] = None,
+                 wbits: Optional[int] = None) -> int:
     """The swept vocab-strip width for a (D, V) verify shape.
 
-    Exact table hit wins; otherwise the nearest swept shape by log-space
-    distance (tile choice tracks scale, not exact dims); otherwise the
-    historical default of 512.
+    ``wbits`` selects the quantized-kernel sweeps (keys carry an ``@q8`` /
+    ``@q4`` suffix — the int tiles change the VMEM-residency trade-off, so
+    they are swept separately). Exact table hit wins; otherwise the nearest
+    same-family swept shape by log-space distance (tile choice tracks
+    scale, not exact dims); a quantized lookup with no quantized entries
+    falls back to the fp table; otherwise the historical default of 512.
     """
     if backend is None:
         import jax
@@ -62,12 +65,21 @@ def best_block_v(d_model: int, vocab: int,
     entries = _table().get(backend, {})
     if not entries:
         return DEFAULT_BLOCK_V
-    key = f"{d_model}x{vocab}"
+    suffix = f"@q{wbits}" if wbits else ""
+    key = f"{d_model}x{vocab}{suffix}"
     if key in entries:
         return int(entries[key])
 
+    def family(sfx: str) -> Dict[str, int]:
+        return {k: v for k, v in entries.items()
+                if (k.endswith(sfx) if sfx else "@" not in k)}
+
+    pool = family(suffix) or family("")
+    if not pool:
+        return DEFAULT_BLOCK_V
+
     def dist(k: str) -> float:
-        d, v = (int(x) for x in k.split("x"))
+        d, v = (int(x) for x in k.split("@")[0].split("x"))
         return (abs(math.log(d_model / d)) + abs(math.log(vocab / v)))
 
-    return int(entries[min(entries, key=dist)])
+    return int(pool[min(pool, key=dist)])

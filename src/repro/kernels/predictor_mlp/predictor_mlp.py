@@ -61,3 +61,77 @@ def predictor_mlp_fused(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
     )
     out = fn(x, w1, b1.reshape(1, H), w2, b2.reshape(1, 1))
     return out[:B, 0]
+
+
+# ---------------------------------------------------------------------------
+# quantized weights: int8 / packed-int4 codes + per-column scales
+# ---------------------------------------------------------------------------
+def _deq(q_ref, s_ref, x, bits):
+    """x @ dequant(q): fold the per-output-column scale after the dot.
+
+    int4 codes are plane-packed (repro.quant): the byte matrix holds row i
+    in the low nibble and row i + d_in/2 in the high nibble, so the two
+    planes contract against the static halves of ``x`` — no interleave.
+    """
+    s = s_ref[...].astype(jnp.float32)                       # (1, d_out)
+    if bits == 4:
+        p = q_ref[...].astype(jnp.int32)                     # (d_in/2, d_out)
+        lo = ((p << 28) >> 28).astype(jnp.float32)
+        hi = (p >> 4).astype(jnp.float32)
+        half = p.shape[0]
+        part = (jnp.dot(x[:, :half], lo, preferred_element_type=jnp.float32)
+                + jnp.dot(x[:, half:], hi,
+                          preferred_element_type=jnp.float32))
+    else:
+        part = jnp.dot(x, q_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    return part * s
+
+
+def _kernel_q(x_ref, q1_ref, s1_ref, b1_ref, q2_ref, s2_ref, b2_ref,
+              out_ref, *, bits1: int, bits2: int):
+    x = x_ref[...].astype(jnp.float32)                       # (Bt, F)
+    h = jnp.maximum(_deq(q1_ref, s1_ref, x, bits1)
+                    + b1_ref[...].astype(jnp.float32), 0.0)  # (Bt, H)
+    out = _deq(q2_ref, s2_ref, h, bits2) + b2_ref[...].astype(jnp.float32)
+    out_ref[...] = jax.nn.sigmoid(out)                       # (Bt, 1)
+
+
+def predictor_mlp_fused_q(x: jnp.ndarray, qw1, b1: jnp.ndarray, qw2,
+                          b2: jnp.ndarray, block_b: int = 256) -> jnp.ndarray:
+    """Quantized-bank sibling of ``predictor_mlp_fused``: qw1/qw2 are
+    ``repro.quant.QTensor`` weights ((F, H) and (H, 1) logical shapes);
+    codes + scales make the single HBM→VMEM trip and the fp weights never
+    exist. x: (B, F) -> (B,) exit probabilities.
+    """
+    B, F = x.shape
+    H = qw1.shape[-1]
+    block_b = min(block_b, B)
+    pad_b = (-B) % block_b
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    nb = x.shape[0] // block_b
+    r1, r2 = qw1.q.shape[0], qw2.q.shape[0]   # packed row counts
+    s1 = qw1.scale.reshape(1, H)
+    s2 = qw2.scale.reshape(1, 1)
+
+    from repro.kernels import interpret_default
+    fn = pl.pallas_call(
+        functools.partial(_kernel_q, bits1=qw1.bits, bits2=qw2.bits),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+            pl.BlockSpec((r1, H), lambda i: (0, 0)),
+            pl.BlockSpec((1, H), lambda i: (0, 0)),
+            pl.BlockSpec((1, H), lambda i: (0, 0)),
+            pl.BlockSpec((r2, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
+        interpret=interpret_default(),
+        name=f"specee_predictor_mlp_q{qw1.bits}",
+    )
+    out = fn(x, qw1.q, s1, b1.reshape(1, H), qw2.q, s2, b2.reshape(1, 1))
+    return out[:B, 0]

@@ -7,16 +7,23 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spec_head.spec_head import spec_head_logits
+from repro.kernels.spec_head.spec_head import (spec_head_logits,
+                                               spec_head_logits_q)
+from repro.quant import QTensor
 
 
 @partial(jax.jit, static_argnames=("block_d",))
-def spec_head(hn: jnp.ndarray, lm_head: jnp.ndarray, spec_ids: jnp.ndarray,
+def spec_head(hn: jnp.ndarray, lm_head, spec_ids: jnp.ndarray,
               block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused gather + k-GEMM + softmax.
 
-    hn: (B, D) final-normed hidden; lm_head: (D, V); spec_ids: (B, k) int32.
+    hn: (B, D) final-normed hidden; lm_head: (D, V) array or a
+    ``repro.quant.QTensor`` (int8 / packed-int4 codes + per-column scales
+    — dequant fuses into the gather tiles); spec_ids: (B, k) int32.
     Returns (logits (B, k) fp32, local_probs (B, k) fp32).
     """
-    logits = spec_head_logits(hn, lm_head, spec_ids, block_d=block_d)
+    if isinstance(lm_head, QTensor):
+        logits = spec_head_logits_q(hn, lm_head, spec_ids, block_d=block_d)
+    else:
+        logits = spec_head_logits(hn, lm_head, spec_ids, block_d=block_d)
     return logits, jax.nn.softmax(logits, axis=-1)

@@ -7,13 +7,20 @@ import jax
 import jax.numpy as jnp
 
 
-def spec_head_ref(hn: jnp.ndarray, lm_head: jnp.ndarray,
+def spec_head_ref(hn: jnp.ndarray, lm_head,
                   spec_ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """hn: (B, D); lm_head: (D, V); spec_ids: (B, k) int32.
+    """hn: (B, D); lm_head: (D, V) array or ``repro.quant.QTensor``;
+    spec_ids: (B, k) int32.
 
+    A quantized head is gathered-then-dequantized — bit-identical to
+    dequantize-then-gather because the scales are per-column.
     Returns (logits (B, k) fp32, local_probs (B, k) fp32).
     """
-    cols = jnp.take(lm_head, spec_ids, axis=1)        # (D, B, k)
+    from repro.quant import QTensor, take_columns
+    if isinstance(lm_head, QTensor):
+        cols = take_columns(lm_head, spec_ids)        # (D, B, k) fp32
+    else:
+        cols = jnp.take(lm_head, spec_ids, axis=1)    # (D, B, k)
     cols = jnp.moveaxis(cols, 1, 0)                   # (B, D, k)
     logits = jnp.einsum("bd,bdk->bk", hn.astype(jnp.float32),
                         cols.astype(jnp.float32))

@@ -70,3 +70,92 @@ def spec_head_logits(hn: jnp.ndarray, lm_head: jnp.ndarray,
         name="specee_spec_head",
     )
     return fn(spec_ids, hn, lm_head)
+
+
+# ---------------------------------------------------------------------------
+# quantized LM head: int8 / packed-int4 column gather, dequant in-register
+# ---------------------------------------------------------------------------
+def _kernel_q8(ids_ref, h_ref, w_ref, s_ref, out_ref):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    h = h_ref[...].astype(jnp.float32)        # (1, Dt)
+    w = w_ref[...].astype(jnp.float32)        # (Dt, 1) int8 codes
+    out_ref[...] += (jnp.dot(h, w, preferred_element_type=jnp.float32)
+                     * s_ref[0, 0])
+
+
+def _kernel_q4(ids_ref, hlo_ref, hhi_ref, w_ref, s_ref, out_ref):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    h_lo = hlo_ref[...].astype(jnp.float32)   # (1, Dt) rows [0, D/2)
+    h_hi = hhi_ref[...].astype(jnp.float32)   # (1, Dt) rows [D/2, D)
+    p = w_ref[...].astype(jnp.int32)          # (Dt, 1) packed bytes
+    lo = ((p << 28) >> 28).astype(jnp.float32)
+    hi = (p >> 4).astype(jnp.float32)
+    part = (jnp.dot(h_lo, lo, preferred_element_type=jnp.float32)
+            + jnp.dot(h_hi, hi, preferred_element_type=jnp.float32))
+    out_ref[...] += part * s_ref[0, 0]
+
+
+def spec_head_logits_q(hn: jnp.ndarray, qt, spec_ids: jnp.ndarray,
+                       block_d: int = 512) -> jnp.ndarray:
+    """Quantized-head sibling of ``spec_head_logits``. qt: QTensor of
+    logical shape (D, V) (int8 codes or the plane-packed int4 layout from
+    ``repro.quant``). The scalar-prefetched gather streams k integer
+    columns + k scale scalars per row; dequant is the per-tile
+    scale multiply, so the result matches the dequantized reference
+    exactly (per-column scales: dequant∘gather ≡ gather∘dequant).
+    """
+    B, D = hn.shape
+    k = spec_ids.shape[1]
+    q = qt.q
+    V = q.shape[-1]
+    scale = qt.scale.reshape(1, V)
+    rows = q.shape[0]                          # D (int8) or D/2 (int4)
+    block_d = min(block_d, rows)
+    while rows % block_d:
+        block_d //= 2
+    nd = rows // block_d
+
+    w_spec = pl.BlockSpec((block_d, 1), lambda b, j, d, ids: (d, ids[b, j]))
+    s_spec = pl.BlockSpec((1, 1), lambda b, j, d, ids: (0, ids[b, j]))
+    if qt.bits == 4:
+        in_specs = [
+            pl.BlockSpec((1, block_d), lambda b, j, d, ids: (b, d)),
+            pl.BlockSpec((1, block_d),
+                         lambda b, j, d, ids, nd=nd: (b, d + nd)),
+            w_spec, s_spec,
+        ]
+        operands = (spec_ids, hn, hn, q, scale)
+        kernel = _kernel_q4
+    else:
+        in_specs = [pl.BlockSpec((1, block_d), lambda b, j, d, ids: (b, d)),
+                    w_spec, s_spec]
+        operands = (spec_ids, hn, q, scale)
+        kernel = _kernel_q8
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, k, nd),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda b, j, d, ids: (b, j)),
+    )
+    from repro.kernels import interpret_default, tpu_compiler_params
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, k), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret_default(),
+        name=f"specee_spec_head_q{qt.bits}",
+    )
+    return fn(*operands)

@@ -88,6 +88,11 @@ def main() -> None:
                     help="CI smoke: few short requests + completion asserts")
     ap.add_argument("--ticks-per-check", type=int, default=1,
                     help="(reserved) serving ticks between health checks")
+    ap.add_argument("--quant", default=None, choices=["int8", "int4"],
+                    help="weight-only compression (repro.quant): quantize "
+                         "the LM head, predictor bank, and attention/MLP "
+                         "projections; dequant is fused into the decode "
+                         "kernels (the fp params stay untouched)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for --mode dense "
                          "(0 = greedy)")
@@ -166,7 +171,8 @@ def main() -> None:
                              megatick=megatick,
                              async_ticks=False if args.sync_ticks else None,
                              checkpoint_dir=checkpoint_dir,
-                             guard=guard if checkpoint_dir else None)
+                             guard=guard if checkpoint_dir else None,
+                             quant=args.quant)
 
     def run_engine(megatick: int, checkpoint_dir=None, restore=False):
         engine = make_engine(megatick, checkpoint_dir=checkpoint_dir)
@@ -215,7 +221,8 @@ def main() -> None:
           f"({toks/dt:.1f} tok/s, mode={mode}, cache={mgr.kind}, "
           f"chunk={engine.scheduler.chunk_tokens}, "
           f"megatick={args.megatick}, async={engine.async_ticks}, "
-          f"fused_gate={not args.no_fused_gate})")
+          f"fused_gate={not args.no_fused_gate}, "
+          f"quant={args.quant or 'fp'})")
     if inj is not None:
         assert args.inject in inj.fired_sites(), \
             f"--inject {args.inject} never fired (schedule {schedule.plan})"

@@ -295,29 +295,40 @@ def _block_step(cfg: ModelConfig, kind: str, p: Params, h: jnp.ndarray,
         else:
             new_entry = _entry_write_token(
                 cache_entry, {"k": k[:, 0], "v": v[:, 0]}, pages, rows, pvec)
-        if pages is None:
-            k_view, v_view = new_entry["k"], new_entry["v"]
-            ks_view = new_entry.get("ks")
-            vs_view = new_entry.get("vs")
+        use_paged_kernel = flags.decode_kernel and pages is not None
+        if use_paged_kernel:
+            # the paged kernel reads pages (and, under kv_quant, scale
+            # pages) straight from the pool — never build the gathered view
+            k_cache = v_cache = None
         else:
-            k_view = paged_lib.gather_view(new_entry["k"], pages)
-            v_view = paged_lib.gather_view(new_entry["v"], pages)
-            ks_view = (paged_lib.gather_view(new_entry["ks"], pages)
-                       if flags.kv_quant else None)
-            vs_view = (paged_lib.gather_view(new_entry["vs"], pages)
-                       if flags.kv_quant else None)
-        if flags.kv_quant:
-            k_cache = _kv_dequantize(k_view, ks_view, h.dtype)
-            v_cache = _kv_dequantize(v_view, vs_view, h.dtype)
-        else:
-            k_cache, v_cache = k_view, v_view
-        if flags.decode_kernel and pages is not None and not flags.kv_quant:
+            if pages is None:
+                k_view, v_view = new_entry["k"], new_entry["v"]
+                ks_view = new_entry.get("ks")
+                vs_view = new_entry.get("vs")
+            else:
+                k_view = paged_lib.gather_view(new_entry["k"], pages)
+                v_view = paged_lib.gather_view(new_entry["v"], pages)
+                ks_view = (paged_lib.gather_view(new_entry["ks"], pages)
+                           if flags.kv_quant else None)
+                vs_view = (paged_lib.gather_view(new_entry["vs"], pages)
+                           if flags.kv_quant else None)
+            if flags.kv_quant:
+                k_cache = _kv_dequantize(k_view, ks_view, h.dtype)
+                v_cache = _kv_dequantize(v_view, vs_view, h.dtype)
+            else:
+                k_cache, v_cache = k_view, v_view
+        if use_paged_kernel:
             # page-table-aware split-KV kernel: reads pages straight from the
-            # pool, never materializing the (B, S, ...) logical view
+            # pool, never materializing the (B, S, ...) logical view; int8
+            # pools stream codes + per-position scale pages and dequantize
+            # in-register (gather∘dequant ≡ dequant∘gather — per-position
+            # scales commute with the page gather)
             from repro.kernels.decode_attention import ops as da_ops
             o = da_ops.paged_decode_attention(
                 cfg, q, new_entry["k"], new_entry["v"], pages, pvec + 1,
-                window=_window(cfg, kind))
+                window=_window(cfg, kind),
+                k_scale=new_entry["ks"] if flags.kv_quant else None,
+                v_scale=new_entry["vs"] if flags.kv_quant else None)
         elif flags.decode_kernel:
             from repro.kernels.decode_attention import ops as da_ops
             o = da_ops.decode_attention(cfg, q, k_cache, v_cache, pvec + 1,

@@ -1,0 +1,21 @@
+"""Weight-only int8/int4 compression for the decode path (DESIGN.md §8).
+
+The paper positions SpecEE as "a framework for various existing orthogonal
+acceleration techniques (e.g., quantization …)"; this package is the
+weight-only half of that composition. Selected weight tensors — the LM head
+the streaming verify kernels read every token, the spec-head gather, the
+exit predictors, and the per-layer projections — are converted to int8 or
+packed int4 with per-output-channel scales and stored in a *parallel*
+pytree. The original params are never touched (the paper's "without
+affecting the model original parameters" property), so training, prefill,
+and any fp path keep reading the fp weights while the decode loop streams
+the compressed copies.
+"""
+from repro.quant.core import (QTensor, QuantSpec, dequantize,
+                              dequantized_reference, merge_dequant,
+                              pack_int4, quantize_params, quantize_tensor,
+                              take_columns, unpack_int4)
+
+__all__ = ["QTensor", "QuantSpec", "dequantize", "dequantized_reference",
+           "merge_dequant", "pack_int4", "quantize_params",
+           "quantize_tensor", "take_columns", "unpack_int4"]

@@ -1,0 +1,300 @@
+"""Quantized-weight containers and the params → parallel-pytree converter.
+
+Layout contract (shared with the fused kernels — DESIGN.md §8):
+
+* Scales are **per output channel**: a weight ``W (..., d_in, d_out)``
+  stores ``scale (..., d_out)`` fp32 and ``q`` integer codes with
+  ``W ≈ q * scale[..., None, :]``. Per-column scales are what lets the
+  streaming verify kernel fold the dequant *after* the tile dot product
+  (the scale is constant down the contracted dimension), so the MXU still
+  sees one integer-fed fp32 matmul per tile.
+* int8: symmetric, codes in [-127, 127], ``scale = amax / 127``.
+* int4: symmetric, codes in [-7, 7], ``scale = amax / 7``, two codes per
+  byte in **plane packing**: the low nibble holds row ``i`` of the first
+  half ``[0, d_in/2)`` and the high nibble row ``i + d_in/2``. Unpacking is
+  a concatenation of the two planes — never an interleave — so a kernel can
+  process the halves as two independent tiles (dual-h trick) and a ref path
+  can reassemble with one ``concatenate``. ``d_in`` must be even (odd
+  tensors silently fall back to int8).
+
+Quantization never mutates the source pytree: ``quantize_params`` builds a
+parallel structure of ``QTensor`` leaves and the engine decides per call
+site whether to read the fp or the compressed copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+INT4_MAX = 7
+INT8_MAX = 127
+
+
+# ---------------------------------------------------------------------------
+# int4 plane packing
+# ---------------------------------------------------------------------------
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack int codes in [-7, 7] along axis -2: (..., d, n) -> (..., d/2, n).
+
+    Byte layout: ``(lo & 0xF) | (hi << 4)`` with lo = rows [0, d/2) and
+    hi = rows [d/2, d) (plane packing — see module docstring).
+    """
+    d = codes.shape[-2]
+    if d % 2:
+        raise ValueError(f"int4 plane packing needs an even row count, got {d}")
+    c = jnp.clip(codes.astype(jnp.int32), -INT4_MAX, INT4_MAX)
+    lo, hi = jnp.split(c, 2, axis=-2)
+    return ((lo & 0xF) | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of ``pack_int4``: (..., d/2, n) -> two int32 planes.
+
+    Returns (lo, hi) sign-extended; the full matrix is their axis -2
+    concatenation.
+    """
+    p = packed.astype(jnp.int32)
+    hi = p >> 4                       # arithmetic shift: sign-extends
+    lo = (p << 28) >> 28
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# QTensor
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """A quantized weight: integer codes + per-output-channel fp32 scales.
+
+    ``q``: int8 codes, shape (..., d_in, d_out) for bits=8 or the packed
+    (..., d_in/2, d_out) plane layout for bits=4. ``scale``: fp32,
+    (..., d_out). ``bits`` is pytree aux data — static under jit, so ops
+    wrappers can branch on it (and on ``isinstance(w, QTensor)``) without
+    extra static arguments.
+    """
+
+    def __init__(self, q: jnp.ndarray, scale: jnp.ndarray, bits: int):
+        self.q = q
+        self.scale = scale
+        self.bits = int(bits)
+
+    # -- pytree protocol --
+    def tree_flatten(self):
+        return (self.q, self.scale), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        q, scale = children
+        return cls(q, scale, bits)
+
+    # -- introspection --
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        mult = 2 if self.bits == 4 else 1
+        s = self.q.shape
+        return s[:-2] + (s[-2] * mult, s[-1])
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    def nbytes(self) -> int:
+        """Weight-stream footprint (codes + scales) in bytes."""
+        return int(self.q.size) + 4 * int(self.scale.size)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"QTensor(shape={self.shape}, bits={self.bits}, "
+                f"packed={self.q.shape})")
+
+    # -- math --
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return dequantize(self, dtype)
+
+
+def quantize_tensor(w: jnp.ndarray, bits: int) -> QTensor:
+    """Symmetric per-output-column quantization of ``w (..., d_in, d_out)``."""
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if bits == 4 and w.shape[-2] % 2:
+        bits = 8                      # plane packing needs even rows
+    wf = w.astype(jnp.float32)
+    qmax = INT4_MAX if bits == 4 else INT8_MAX
+    amax = jnp.max(jnp.abs(wf), axis=-2) + 1e-8          # (..., d_out)
+    scale = (amax / qmax).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(wf / scale[..., None, :]), -qmax, qmax)
+    if bits == 4:
+        q = pack_int4(codes)
+    else:
+        q = codes.astype(jnp.int8)
+    return QTensor(q, scale, bits)
+
+
+def dequantize(qt: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    """Materialize the fp weight: codes * per-column scale."""
+    if qt.bits == 4:
+        lo, hi = unpack_int4(qt.q)
+        codes = jnp.concatenate([lo, hi], axis=-2)
+    else:
+        codes = qt.q.astype(jnp.int32)
+    w = codes.astype(jnp.float32) * qt.scale[..., None, :]
+    return w.astype(dtype)
+
+
+def take_columns(qt: QTensor, ids: jnp.ndarray) -> jnp.ndarray:
+    """Gather-then-dequantize columns: (d_in, ids.shape...) fp32.
+
+    Per-column scales make dequant∘gather ≡ gather∘dequant exactly, so this
+    is the cheap form the ref/xla paths use for spec-head style gathers.
+    """
+    qcols = jnp.take(qt.q, ids, axis=-1)                 # (din', *ids)
+    scols = jnp.take(qt.scale, ids, axis=-1)             # (*ids,)
+    if qt.bits == 4:
+        lo, hi = unpack_int4(jnp.moveaxis(qcols, 0, -1))
+        codes = jnp.concatenate([lo, hi], axis=-1)       # (*ids, d_in)
+        codes = jnp.moveaxis(codes, -1, 0)               # (d_in, *ids)
+    else:
+        codes = qcols.astype(jnp.int32)
+    return codes.astype(jnp.float32) * scols[None]
+
+
+# ---------------------------------------------------------------------------
+# QuantSpec + params conversion
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """What to compress and how.
+
+    ``bits`` applies to every selected tensor. Selection flags:
+    ``lm_head`` — the verify/spec-head LM head (the per-token HBM hot spot);
+    ``predictors`` — the stacked exit-predictor MLP bank;
+    ``proj`` — per-layer attention/MLP projection matrices (weight-only:
+    dequant happens inside the consumer jit, XLA fuses it into the matmul).
+    MoE expert banks and norms/biases/embeddings are never quantized.
+    """
+
+    bits: int = 8
+    lm_head: bool = True
+    predictors: bool = True
+    proj: bool = True
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"QuantSpec.bits must be 4 or 8, got {self.bits}")
+
+    @classmethod
+    def resolve(cls, spec) -> "QuantSpec":
+        """Accept a QuantSpec, 'int8'/'int4', 8/4, or None (-> no quant)."""
+        if spec is None or isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            name = spec.lower().lstrip("int")
+            if name in ("8", "4"):
+                return cls(bits=int(name))
+            raise ValueError(f"unknown quant spec {spec!r} "
+                             "(want 'int8' or 'int4')")
+        if spec in (4, 8):
+            return cls(bits=int(spec))
+        raise ValueError(f"cannot resolve quant spec {spec!r}")
+
+
+def _quantize_proj_subtree(p: Dict[str, Any], bits: int) -> Dict[str, Any]:
+    """Parallel subtree of QTensors for the attn/mlp linear ``w`` leaves.
+
+    Returns a nested dict mirroring ``p``'s paths but containing ONLY the
+    quantized leaves — ``merge_dequant`` later grafts them back. Stacked
+    segment leaves carry a leading (reps,) dim; QTensor handles it as a
+    batch dim.
+    """
+    out: Dict[str, Any] = {}
+    for unit_key, unit in p.items():
+        got: Dict[str, Any] = {}
+        for sub in ("attn", "mlp"):
+            if sub not in unit:
+                continue
+            qsub = {}
+            for name, lin in unit[sub].items():
+                if isinstance(lin, dict) and "w" in lin and lin["w"].ndim >= 2:
+                    qsub[name] = {"w": quantize_tensor(lin["w"], bits)}
+            if qsub:
+                got[sub] = qsub
+        if got:
+            out[unit_key] = got
+    return out
+
+
+def quantize_params(params: common.Params, sw, spec) -> Optional[Dict[str, Any]]:
+    """Build the parallel quantized pytree for a params + SpecEE bundle.
+
+    Returns ``{"lm_head": QTensor|None, "predictors": bank|None,
+    "proj": [per-segment subtree]|None}`` — or None when ``spec`` is None.
+    ``params`` and ``sw`` are read, never written; a tied LM head is
+    materialized (embedding transpose) before quantization.
+    """
+    spec = QuantSpec.resolve(spec)
+    if spec is None:
+        return None
+    qw: Dict[str, Any] = {"lm_head": None, "predictors": None, "proj": None}
+    if spec.lm_head:
+        qw["lm_head"] = quantize_tensor(common.lm_head_weight(params),
+                                        spec.bits)
+    if spec.predictors and sw is not None and sw.predictors is not None:
+        layers = []
+        for layer in sw.predictors["layers"]:
+            layers.append({"w": quantize_tensor(layer["w"], spec.bits),
+                           "b": layer["b"]})
+        qw["predictors"] = {"layers": layers}
+    if spec.proj:
+        qw["proj"] = [_quantize_proj_subtree(seg, spec.bits)
+                      for seg in params["segments"]]
+    return qw
+
+
+def merge_dequant(params: common.Params, qproj) -> common.Params:
+    """Params view with projection leaves replaced by their dequantized
+    copies (weight-only decoding: the int8/int4 codes are what lives in
+    HBM; the dequant runs inside the same jit as the consumer matmul, so
+    XLA fuses it and the fp weight never round-trips).
+    """
+    if qproj is None:
+        return params
+
+    def graft(dst, src):
+        if isinstance(src, QTensor):
+            return src.dequantize(dst.dtype if hasattr(dst, "dtype")
+                                  else jnp.float32)
+        out = dict(dst)
+        for k, v in src.items():
+            out[k] = graft(dst[k], v)
+        return out
+
+    segs = [graft(seg, qseg) if qseg else seg
+            for seg, qseg in zip(params["segments"], qproj)]
+    return dict(params, segments=segs)
+
+
+def dequantized_reference(params: common.Params, sw, qw
+                          ) -> Tuple[common.Params, Any]:
+    """(params', sw') where every quantized tensor is replaced by its
+    dequantized fp copy — the oracle the token-parity tests decode against:
+    a plain (unquantized) engine on (params', sw') must emit exactly what a
+    quantized engine on (params, sw, qw) emits.
+    """
+    p2 = merge_dequant(params, qw.get("proj"))
+    if qw.get("lm_head") is not None:
+        # explicit lm_head entry overrides a tied embedding transpose
+        p2 = dict(p2, lm_head={"w": qw["lm_head"].dequantize()})
+    sw2 = sw
+    if qw.get("predictors") is not None and sw is not None:
+        layers = [{"w": l["w"].dequantize(), "b": l["b"]}
+                  for l in qw["predictors"]["layers"]]
+        sw2 = sw._replace(predictors={"layers": layers})
+    return p2, sw2

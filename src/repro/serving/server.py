@@ -129,7 +129,8 @@ class ServingEngine:
                  evict_patience: int = 2,
                  watchdog_s: Optional[float] = None,
                  backoff: Optional[Backoff] = None,
-                 cooldown_ticks: int = 8):
+                 cooldown_ticks: int = 8,
+                 quant=None):
         spec = CacheSpec.resolve(cache, model.run.serve)
         if page_size is not None:
             # the override obeys the same rule ServeConfig validates at
@@ -163,8 +164,11 @@ class ServingEngine:
                 strategy = DenseStrategy(
                     temperature=self.serve_cfg.temperature)
         self.strategy = get_strategy(strategy)
+        # ``quant``: None | "int8" | "int4" | QuantSpec — weight-only
+        # compression applied once at engine build (parallel pytree; the
+        # fp params are untouched and stay the checkpoint of record)
         self.engine = Engine.create(model, params, sw=sw,
-                                    strategy=self.strategy)
+                                    strategy=self.strategy, quant=quant)
         B = self.serve_cfg.max_batch
         S = self.serve_cfg.max_seq_len
         self.B, self.S = B, S

@@ -100,11 +100,18 @@ def test_serving_paged_matches_dense_kv_quant(setup):
 def test_tree_rejects_kv_quant(setup):
     """Tree × kv_quant is unsupported (scratch writes are full-precision);
     the strategy rejects it with a clear error instead of a tree_map crash
-    inside the first step."""
+    inside the first step. The MESSAGE is pinned: it names the cause and
+    both escape hatches, and DESIGN.md §4's support matrix cites it — a
+    reworded error must update the matrix in the same change."""
     run, m, params, sw = setup
     mq = build_model(run, ModelFlags(kv_quant=True))
-    with pytest.raises(ValueError, match="kv_quant"):
+    with pytest.raises(ValueError) as ei:
         Engine.create(mq, params, sw, strategy="tree")
+    assert str(ei.value) == (
+        "tree strategy does not support kv_quant: tree scratch writes are "
+        "full-precision (the node K/V is re-read within the same step, "
+        "where int8 round-tripping would corrupt verification); decode "
+        "with the AR engine instead (DESIGN.md §4)")
 
 
 def test_paged_hybrid_arch(setup):
@@ -211,6 +218,25 @@ def test_chunked_prefill_interleaves_with_decode(setup):
         "live decode stalled during chunked admission"
     se.run_to_completion()
     assert len(r_short.output) == 16 and len(r_long.output) == 2
+
+
+def test_chunked_matches_blocking_admission_kv_quant(setup):
+    """kv_quant × chunked prefill: ``attend_extend`` claims kv_quant
+    awareness, but only whole-batch admission exercised it — chunked
+    admission must quantize each chunk's K/V identically to the blocking
+    path (same tokens out, both cache layouts)."""
+    run, m, params, sw = setup
+    mq = build_model(run, ModelFlags(kv_quant=True))
+    prompts = _prompts(run, seed=11, lo=6, hi=12)
+    outs = {}
+    for cache in ("dense", "paged"):
+        for chunk in (4, 0):
+            _, outs[(cache, chunk)] = _serve(
+                mq, params, sw, prompts, strategy="specee", cache=cache,
+                prefill_chunk=chunk)
+    assert outs[("dense", 4)] == outs[("dense", 0)]
+    assert outs[("paged", 4)] == outs[("paged", 0)]
+    assert outs[("paged", 0)] == outs[("dense", 0)]
 
 
 def test_chunked_prefill_dense_cache_too(setup):
@@ -340,3 +366,19 @@ def test_paged_decode_kernel_end_to_end(setup):
     _, outs = _serve(mk, params, sw, prompts, max_new=3, strategy="specee",
                      cache="paged")
     assert all(len(o) == 3 for o in outs)
+
+
+def test_paged_decode_kernel_kv_quant_matches_xla(setup):
+    """kv_quant no longer forces the gathered-XLA fallback: the paged kernel
+    consumes the int8 pools + scale pools directly (same page-table gather,
+    dequant inside the tile) and reproduces the XLA kv_quant path
+    token-for-token."""
+    run, m, params, sw = setup
+    prompts = _prompts(run, n=2, seed=12)
+    outs = {}
+    for decode_kernel in (False, True):
+        mq = build_model(run, ModelFlags(kv_quant=True,
+                                         decode_kernel=decode_kernel))
+        _, outs[decode_kernel] = _serve(mq, params, sw, prompts, max_new=4,
+                                        strategy="specee", cache="paged")
+    assert outs[True] == outs[False]

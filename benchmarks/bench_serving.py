@@ -22,8 +22,22 @@ pipeline against the per-tick host-synced loop: on CPU at smoke scale the
 regime is exactly the host-sync-dominated one the megatick targets, so
 decode_tok_s should scale strongly with K (acceptance: ≥2× at K=16 vs K=1).
 
+Sharded rows (DESIGN.md §9): ``--tp N`` runs the same variants under a
+(1, N) tensor-parallel mesh on forced host devices and labels the rows
+``mesh="tpN"``; ``--tp-sweep`` re-execs itself for N ∈ {1, 2, 4} (a fresh
+process per degree — the forced-host-device flag must precede jax backend
+init). Rows MERGE into BENCH_serving.json by (batch, variant, mesh), so a
+sweep extends the committed table instead of clobbering the other rows.
+
+``--gate`` is the CI perf gate (ROADMAP item 5): re-measures a small config
+and compares ``decode_tok_s`` against the committed rows, failing (exit 1)
+on a >20% regression. Rows with no committed counterpart (or a different
+backend) are skipped, so the gate degrades gracefully on fresh checkouts.
+
     python -m benchmarks.bench_serving
     python -m benchmarks.bench_serving --batches 2 4 --rounds 4
+    python -m benchmarks.bench_serving --tp-sweep
+    python -m benchmarks.bench_serving --gate
 """
 from __future__ import annotations
 
@@ -32,6 +46,8 @@ import dataclasses
 import json
 import math
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -44,6 +60,39 @@ from repro.serving import ServingEngine
 
 _JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                      "BENCH_serving.json")
+
+# the variant subset sharded / gate runs measure (the serving hot paths;
+# the full grid at tp1 stays the default)
+_CORE_VARIANTS = ("paged+chunked", "paged+chunked+mt4", "paged+chunked+mt16")
+
+
+def _load_rows():
+    if not os.path.exists(_JSON):
+        return []
+    with open(_JSON) as f:
+        rows = json.load(f)
+    for r in rows:                      # rows predating the mesh column
+        r.setdefault("mesh", "tp1")
+    return rows
+
+
+def _merge_rows(new):
+    """Read-modify-write by (batch, variant, mesh) — a TP sweep or a partial
+    re-run updates its own rows and leaves the rest of the table alone."""
+    rows = _load_rows()
+    key = lambda r: (r["batch"], r["variant"], r["mesh"])  # noqa: E731
+    have = {key(r): i for i, r in enumerate(rows)}
+    for r in new:
+        k = key(r)
+        if k in have:
+            rows[have[k]] = r
+        else:
+            have[k] = len(rows)
+            rows.append(r)
+    rows.sort(key=lambda r: (r["mesh"], r["batch"], r["variant"]))
+    with open(_JSON, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
 
 
 def _requests(run, n, seed=0, lo=6, hi=14):
@@ -89,8 +138,15 @@ def _one_round(se, prompts, max_new):
             "decode_ticks": ticks, "min_tick_s": min_tick}
 
 
-def bench(batches, rounds, max_new):
+def bench(batches, rounds, max_new, tp=1, variants_filter=None, write=True):
     base = get_config("llama2-7b").smoke()
+    mesh_label = f"tp{tp}"
+    mesh = None
+    if tp > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(1, tp)
+        if variants_filter is None:
+            variants_filter = _CORE_VARIANTS
     rows = []
     for B in batches:
         run = dataclasses.replace(
@@ -114,8 +170,11 @@ def bench(batches, rounds, max_new):
             "paged+chunked+mt4": dict(cache="paged", megatick=4),
             "paged+chunked+mt16": dict(cache="paged", megatick=16),
         }
+        if variants_filter is not None:
+            variants = {k: v for k, v in variants.items()
+                        if k in variants_filter}
         engines = {name: ServingEngine(model, params, sw, strategy="specee",
-                                       **kw)
+                                       mesh=mesh, **kw)
                    for name, kw in variants.items()}
         best = {name: {"tok_s": 0.0, "decode_tok_s": 0.0,
                        "admission_ms": float("inf"),
@@ -138,7 +197,7 @@ def bench(batches, rounds, max_new):
         for name in variants:
             se = engines[name]
             b = best[name]
-            row = {"batch": B, "variant": name,
+            row = {"batch": B, "variant": name, "mesh": mesh_label,
                    "cache": se.cache_spec.kind,
                    "prefill_chunk": se.scheduler.chunk_tokens or 0,
                    "page_size": se.cache_spec.page_size,
@@ -156,15 +215,63 @@ def bench(batches, rounds, max_new):
                    "tokens": b["tokens"],
                    "backend": jax.default_backend()}
             rows.append(row)
-            print(f"[bench_serving] B={B} {name:18s} "
+            print(f"[bench_serving] B={B} {mesh_label} {name:18s} "
                   f"decode={row['decode_tok_s']:8.1f} tok/s  "
                   f"admit={row['admission_ms']:8.1f}ms  "
                   f"overall={row['tokens_per_s']:7.1f} tok/s  "
                   f"ticks={row['ticks']}")
-    with open(_JSON, "w") as f:
-        json.dump(rows, f, indent=1)
-    print(f"[bench_serving] wrote {_JSON}")
+    if write:
+        _merge_rows(rows)
+        print(f"[bench_serving] merged {len(rows)} rows into {_JSON}")
     return rows
+
+
+def gate(threshold=0.20, rounds=2):
+    """CI perf gate: re-measure the core serving variants at B=2 and diff
+    ``decode_tok_s`` against the committed BENCH_serving.json. A fresh row
+    below (1 - threshold) × its committed counterpart fails the gate; rows
+    with no committed counterpart (or recorded on another backend) are
+    skipped. Returns a process exit code."""
+    committed = {(r["batch"], r["variant"], r["mesh"]): r
+                 for r in _load_rows()}
+    if not committed:
+        print("[bench_serving] --gate: no committed BENCH_serving.json; "
+              "skipping")
+        return 0
+    fresh = bench([2], rounds=rounds, max_new=32,
+                  variants_filter=_CORE_VARIANTS, write=False)
+    failures, checked = [], 0
+    for r in fresh:
+        ref = committed.get((r["batch"], r["variant"], r["mesh"]))
+        if (ref is None or ref.get("backend") != r["backend"]
+                or not ref.get("decode_tok_s")):
+            continue
+        checked += 1
+        floor = (1.0 - threshold) * ref["decode_tok_s"]
+        verdict = "OK" if r["decode_tok_s"] >= floor else "FAIL"
+        print(f"[gate] B={r['batch']} {r['variant']:18s} "
+              f"decode={r['decode_tok_s']:8.1f} tok/s vs committed "
+              f"{ref['decode_tok_s']:8.1f} (floor {floor:8.1f}) {verdict}")
+        if verdict == "FAIL":
+            failures.append(r["variant"])
+    if failures:
+        print(f"[gate] FAIL: >{threshold:.0%} decode_tok_s regression in "
+              f"{failures}")
+        return 1
+    print(f"[gate] OK: {checked} rows within {threshold:.0%} of committed")
+    return 0
+
+
+def tp_sweep(degrees, rounds, max_new):
+    """Re-exec one child per TP degree: the forced-host-device flag must be
+    in XLA_FLAGS before jax initializes its backends, which a fresh process
+    guarantees and an in-process loop cannot."""
+    for deg in degrees:
+        cmd = [sys.executable, "-m", "benchmarks.bench_serving",
+               "--tp", str(deg), "--batches", "2",
+               "--rounds", str(rounds), "--max-new", str(max_new)]
+        print(f"[bench_serving] tp-sweep: {' '.join(cmd)}")
+        subprocess.run(cmd, check=True)
 
 
 if __name__ == "__main__":
@@ -172,5 +279,25 @@ if __name__ == "__main__":
     ap.add_argument("--batches", type=int, nargs="+", default=[2, 4, 8])
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: run the core variants "
+                         "under a (1, N) mesh on forced host devices and "
+                         "label the rows mesh=tpN")
+    ap.add_argument("--tp-sweep", action="store_true",
+                    help="one child process per degree in {1, 2, 4}")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI perf gate: fail on >--gate-threshold "
+                         "decode_tok_s regression vs the committed rows")
+    ap.add_argument("--gate-threshold", type=float, default=0.20)
     args = ap.parse_args()
-    bench(args.batches, args.rounds, args.max_new)
+    if args.tp > 1:
+        # before any jax backend touch (module import alone doesn't init)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.tp}").strip()
+    if args.gate:
+        sys.exit(gate(threshold=args.gate_threshold))
+    if args.tp_sweep:
+        tp_sweep((1, 2, 4), min(args.rounds, 3), args.max_new)
+        sys.exit(0)
+    bench(args.batches, args.rounds, args.max_new, tp=args.tp)

@@ -80,4 +80,23 @@ if [ "$#" -eq 0 ]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python -m repro.launch.serve --ci --megatick 4 --inject "$SITE"
   done
+
+  # sharded serving smoke (DESIGN.md §9): tensor-parallel megatick on forced
+  # host devices — --ci asserts token parity against an unsharded reference
+  # run in the same process; then a 2-replica data-parallel pool whose
+  # outputs must match a single-engine run.
+  echo "[ci] launch/serve.py --ci --mesh 1,2 --megatick 4 (TP smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --mesh 1,2 --megatick 4
+  echo "[ci] launch/serve.py --ci --replicas 2 (replica-pool smoke)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --replicas 2
+
+  # serving perf gate (ROADMAP item 5): re-measure the core serving
+  # variants and fail on a >20% decode_tok_s regression vs the committed
+  # BENCH_serving.json rows (skips gracefully when rows are missing or
+  # recorded on a different backend).
+  echo "[ci] bench_serving --gate (decode_tok_s regression gate)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --gate
 fi

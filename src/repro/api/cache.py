@@ -160,6 +160,18 @@ class KVCacheManager:
                 f"cache snapshot is {st.get('kind')!r}, manager is "
                 f"{self.kind!r} — restore needs the same cache layout")
 
+    # ----- mesh layout (DESIGN.md §9) -----
+    def partition_specs(self, cache: Any, mesh, policy: str = "tp_dp") -> Any:
+        """PartitionSpec tree describing how this manager's cache pytree
+        lays out on ``mesh`` (tensor-parallel serving): KV sharded on the
+        head dim over 'model', bookkeeping replicated. The default delegates
+        to the Megatron-role cache rules (``sharding/policies.cache_specs``
+        with the sequence split off — decode scatters positions
+        dynamically)."""
+        from repro.sharding import policies as pol
+        return pol.cache_specs(self.model, mesh, policy, cache,
+                               kv_seq_shard=False)
+
     # ----- introspection (tests / benchmarks) -----
     def row_span(self, cache: Any, row: int) -> int:
         """Attention span the row currently pays (valid cache positions)."""
@@ -281,6 +293,31 @@ class PagedKVCache(KVCacheManager):
         return {"segments": segs,
                 "len": jnp.zeros((self.batch,), jnp.int32),
                 "page_table": table}
+
+    def partition_specs(self, cache: Any, mesh, policy: str = "tp_dp") -> Any:
+        """Head-sharded paged layout: attention pool leaves shard their
+        KV-head dim over 'model' (``core.paged.pool_partition_dims`` — page
+        ids index the leading dims, so pages/page_size stay whole); the page
+        table, lengths, and non-attention entries are replicated — every
+        shard resolves the same page indirection."""
+        from jax.sharding import PartitionSpec as P
+        from repro.core import paged as paged_lib
+        M = int(dict(mesh.shape).get("model", 1))
+        rep = lambda x: P(*([None] * np.ndim(x)))  # noqa: E731
+        attn = {(seg, key): is_attn
+                for seg, key, is_attn in self._attention_units()}
+        segs = []
+        for seg, entry in enumerate(cache["segments"]):
+            out = {}
+            for key, sub in entry.items():
+                if attn.get((seg, key)):
+                    out[key] = jax.tree_util.tree_map(
+                        lambda x: P(*paged_lib.pool_partition_dims(
+                            np.shape(x), M)), sub)
+                else:
+                    out[key] = jax.tree_util.tree_map(rep, sub)
+            segs.append(out)
+        return {"segments": segs, "len": P(), "page_table": P()}
 
     def _alloc_row(self, row: int) -> np.ndarray:
         if not self._row_pages[row]:

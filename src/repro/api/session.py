@@ -92,12 +92,22 @@ class Engine:
 
     def __init__(self, model: Model, params, sw=None,
                  strategy: Union[str, DecodeStrategy, None] = None,
-                 quant=None):
+                 quant=None, mesh=None, policy: str = "tp_dp"):
         self.model = model
         self.params = params
         self.sw = sw
         self.strategy = get_strategy(strategy)
         self.strategy.validate(model, sw)
+        # tensor-parallel serving (DESIGN.md §9): a 2-D ("data","model") mesh
+        # pins the weights with the Megatron-role specs and threads a static
+        # ShardCtx into the jitted steps (sharded exit-gate verify). A mesh
+        # whose 'model' extent is 1 degenerates to the unsharded path.
+        self.mesh = mesh
+        self.policy = policy
+        self.shard = None
+        if mesh is not None:
+            from repro.sharding.ctx import ShardCtx
+            self.shard = ShardCtx.from_mesh(mesh)
         # weight-only quantization (repro.quant): ``quant`` is a QuantSpec /
         # "int8" / "int4" / None. The quantized bundle is a PARALLEL pytree —
         # ``self.params`` stays untouched (paper: early exiting "without
@@ -106,13 +116,24 @@ class Engine:
         from repro import quant as quant_lib
         self.quant_spec = quant_lib.QuantSpec.resolve(quant)
         self.qw = quant_lib.quantize_params(params, sw, self.quant_spec)
+        if self.shard is not None:
+            from repro.sharding import serving as shard_serving
+            ps, ss, qs = shard_serving.engine_shardings(
+                model, mesh, policy, self.params, self.sw, self.qw)
+            self.params = jax.device_put(self.params, ps)
+            if self.sw is not None:
+                self.sw = jax.device_put(self.sw, ss)
+            if self.qw is not None:
+                self.qw = jax.device_put(self.qw, qs)
         self._prefill_view = None
         strat = self.strategy
+        shard = self.shard
         # the decode state (KV cache pytree included — paged pools + page
         # table too) is DONATED: XLA updates the cache in place every tick
         # instead of reallocating it, and stale state references fail loudly
         self._step_jit = jax.jit(
-            lambda p, s, st, qw: strat.step(model, p, s, st, qw=qw),
+            lambda p, s, st, qw: strat.step(model, p, s, st, qw=qw,
+                                            shard=shard),
             donate_argnums=(2,))
         self._extend_jit = jax.jit(
             lambda p, toks, cache, n: model.prefill_extend(p, toks, cache, n),
@@ -128,10 +149,10 @@ class Engine:
         reads."""
         fn = self._mega_jits.get(num_ticks)
         if fn is None:
-            strat, model = self.strategy, self.model
+            strat, model, shard = self.strategy, self.model, self.shard
             fn = jax.jit(
                 lambda p, s, st, limits, qw: strat.megatick(
-                    model, p, s, st, limits, num_ticks, qw=qw),
+                    model, p, s, st, limits, num_ticks, qw=qw, shard=shard),
                 donate_argnums=(2,))
             self._mega_jits[num_ticks] = fn
         return fn
@@ -139,15 +160,32 @@ class Engine:
     @classmethod
     def create(cls, model: Model, params, sw=None,
                strategy: Union[str, DecodeStrategy, None] = None,
-               quant=None) -> "Engine":
+               quant=None, mesh=None, policy: str = "tp_dp") -> "Engine":
         """The canonical constructor: ``Engine.create(model, params, sw,
         strategy="dense"|"specee"|"tree"|DecodeStrategy(...),
-        quant=None|"int8"|"int4"|QuantSpec(...))``."""
-        return cls(model, params, sw=sw, strategy=strategy, quant=quant)
+        quant=None|"int8"|"int4"|QuantSpec(...),
+        mesh=None|jax.sharding.Mesh)``. A mesh with a 'model' axis of
+        extent > 1 turns on tensor-parallel decode (DESIGN.md §9)."""
+        return cls(model, params, sw=sw, strategy=strategy, quant=quant,
+                   mesh=mesh, policy=policy)
 
     @property
     def emit_width(self) -> int:
         return self.strategy.emit_width(self.model)
+
+    def shard_state(self, state, cache_mgr=None):
+        """Pin a ``DecodeState`` to the engine's mesh layout (no-op when
+        unsharded). Sessions call this wherever a state is (re)built from
+        host values — empty-state alloc, whole-batch prefill, row insert,
+        restore — so the jitted step always sees one stable input layout
+        (drifting shardings would fork the jit cache per layout)."""
+        if self.shard is None:
+            return state
+        from repro.sharding import policies as pol
+        from repro.sharding import serving as shard_serving
+        specs = shard_serving.decode_state_specs(
+            self.model, self.mesh, self.policy, state, cache_mgr=cache_mgr)
+        return jax.device_put(state, pol.named(self.mesh, specs))
 
     def prefill_weights(self):
         """(params, sw) the prefill/admission paths consume.
@@ -238,10 +276,12 @@ class DecodeSession:
                 max_seq = engine.model.run.serve.max_seq_len
                 self._max_seq = max_seq
             self.cache_mgr = self._make_manager(batch, max_seq)
-            self._state = engine.strategy.empty_state(
-                engine.model, engine.sw, batch, max_seq,
-                prng=jax.random.PRNGKey(prng_seed),
-                cache=self.cache_mgr.empty_cache())
+            self._state = engine.shard_state(
+                engine.strategy.empty_state(
+                    engine.model, engine.sw, batch, max_seq,
+                    prng=jax.random.PRNGKey(prng_seed),
+                    cache=self.cache_mgr.empty_cache()),
+                self.cache_mgr)
             self._alloc_bookkeeping(batch, live=False)
 
     def _make_manager(self, batch: int, max_seq: int) -> KVCacheManager:
@@ -459,7 +499,8 @@ class DecodeSession:
                     f"snapshot {key}={meta[key]!r} does not match this "
                     f"session's {key}={have!r}")
         self.cache_mgr.import_state(meta["cache"])
-        self._state = jax.tree_util.tree_map(jnp.asarray, state_tree)
+        self._state = self.engine.shard_state(
+            jax.tree_util.tree_map(jnp.asarray, state_tree), self.cache_mgr)
         self._emitted = np.asarray(meta["emitted"], np.int64)
         self._budget = np.asarray(
             [_NO_BUDGET if b is None else int(b) for b in meta["budget"]],
@@ -493,8 +534,10 @@ class DecodeSession:
             e.model, pparams, psw, batch, max_seq,
             prng=jax.random.PRNGKey(self._prng_seed))
         self.cache_mgr = self._make_manager(B, max_seq)
-        self._state = self._state._replace(
-            cache=self.cache_mgr.from_prefill(self._state.cache))
+        self._state = e.shard_state(
+            self._state._replace(
+                cache=self.cache_mgr.from_prefill(self._state.cache)),
+            self.cache_mgr)
         self._alloc_bookkeeping(B, live=True)
         # the KV cache has max_seq slots: the budget is always bounded by the
         # remaining capacity so a budgetless session still terminates instead
@@ -535,6 +578,7 @@ class DecodeSession:
             h_last=insert_row_pytree(st.h_last, st1.h_last, row, B),
             prng=st.prng,
         )
+        self._state = self.engine.shard_state(self._state, self.cache_mgr)
         cap = max(self._max_seq - prompt_len - 1, 1)
         budget = cap if max_new_tokens is None else min(max_new_tokens, cap)
         self._set_row_limits(row, budget, eos_token)

@@ -80,14 +80,17 @@ class DecodeStrategy:
                                       prng=prng, cache=cache)
 
     def step(self, model: Model, params, sw, state: eng.DecodeState,
-             qw=None) -> Tuple[StepResult, eng.DecodeState]:
+             qw=None, shard=None) -> Tuple[StepResult, eng.DecodeState]:
         """``qw``: optional quantized-weight bundle
         (``repro.quant.quantize_params``) threaded into the engine step —
-        a parallel pytree; the original ``params`` stay untouched."""
+        a parallel pytree; the original ``params`` stay untouched.
+        ``shard``: optional ``repro.sharding.ctx.ShardCtx`` — the engine
+        runs its full-LM-head reductions as per-shard partials (DESIGN.md
+        §9); threaded statically from ``Engine`` (it keys the jit cache)."""
         raise NotImplementedError
 
     def megatick(self, model: Model, params, sw, state: eng.DecodeState,
-                 limits, num_ticks: int, qw=None):
+                 limits, num_ticks: int, qw=None, shard=None):
         """Fuse ``num_ticks`` strategy steps into one device-resident
         ``lax.while_loop`` (``engine.megatick_decode``): per-row budgets, EOS
         cut-off, and the done mask ride in the jitted carry, so host sync
@@ -95,7 +98,8 @@ class DecodeStrategy:
         for every strategy — the adapter below is the only mode-specific
         glue. Returns ``(out dict, new_state, new_limits)``."""
         def tick(st):
-            res, new_st = self.step(model, params, sw, st, qw=qw)
+            res, new_st = self.step(model, params, sw, st, qw=qw,
+                                    shard=shard)
             return eng.TickEmit(tokens=res.tokens, counts=res.counts,
                                 exit_layer=res.exit_layer,
                                 accept_len=res.accept_len,
@@ -117,10 +121,10 @@ class DenseStrategy(DecodeStrategy):
     name = "dense"
     requires_sw = False
 
-    def step(self, model, params, sw, state, qw=None):
+    def step(self, model, params, sw, state, qw=None, shard=None):
         token, new_state, info = eng.dense_decode_step(
             model, params, sw, state, temperature=self.temperature,
-            top_k=self.top_k, qw=qw)
+            top_k=self.top_k, qw=qw, shard=shard)
         return _single_token_result(token, info), new_state
 
 
@@ -135,9 +139,10 @@ class SpecEEStrategy(DecodeStrategy):
     threshold: Optional[float] = None
     name = "specee"
 
-    def step(self, model, params, sw, state, qw=None):
+    def step(self, model, params, sw, state, qw=None, shard=None):
         token, new_state, info = eng.ar_decode_step(
-            model, params, sw, state, threshold=self.threshold, qw=qw)
+            model, params, sw, state, threshold=self.threshold, qw=qw,
+            shard=shard)
         return _single_token_result(token, info), new_state
 
 
@@ -178,10 +183,10 @@ class TreeStrategy(DecodeStrategy):
                 "verification); decode with the AR engine instead "
                 "(DESIGN.md §4)")
 
-    def step(self, model, params, sw, state, qw=None):
+    def step(self, model, params, sw, state, qw=None, shard=None):
         out, n_emit, new_state, info = eng.tree_decode_step(
             model, params, sw, state, self.tree_for(model),
-            threshold=self.threshold, qw=qw)
+            threshold=self.threshold, qw=qw, shard=shard)
         B = out.shape[0]
         res = StepResult(tokens=out,
                          counts=n_emit.astype(jnp.int32),

@@ -180,7 +180,8 @@ def draft_prefill(cfg: ModelConfig, p: Params, embeds: jnp.ndarray,
 
 
 def propose_topk(model, params: Params, h_draft: jnp.ndarray,
-                 k: int, lm_w=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                 k: int, lm_w=None, shard=None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Draft hidden -> top-k speculative token ids via the TLM's LM head.
 
     Streams the vocab through ``exit_gate.ops.verify_topk`` (the top-k
@@ -189,14 +190,16 @@ def propose_topk(model, params: Params, h_draft: jnp.ndarray,
     "ref" impl reproduces the historical ``model.logits`` + ``top_k``
     bit-for-bit. ``lm_w`` overrides the LM head — a ``repro.quant.QTensor``
     here routes the proposal through the quantized verify kernels.
+    ``shard``: optional ShardCtx — the proposal becomes a per-shard partial
+    top-k over the local vocab slice (token-identical merge; DESIGN.md §9).
     Returns (spec_ids (B, k) int32, spec_logits (B, k) fp32).
     """
     from repro.kernels.exit_gate import ops as gate_lib
     hn = model.final_norm(params, h_draft)
     if lm_w is None:
         lm_w = common.lm_head_weight(params)
-    ids, vals = gate_lib.verify_topk(hn, lm_w, k,
-                                     impl=gate_lib.impl_for_flags(model.flags))
+    ids, vals = gate_lib.verify_topk(
+        hn, lm_w, k, impl=gate_lib.impl_for_flags(model.flags), shard=shard)
     return ids, vals
 
 

@@ -189,13 +189,17 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                    state: DecodeState,
                    threshold: Optional[float] = None,
                    spec_ids_override: Optional[jnp.ndarray] = None,
-                   qw=None
+                   qw=None, shard=None
                    ) -> Tuple[jnp.ndarray, DecodeState, StepInfo]:
     """Decode one token for every row with speculative early exiting.
 
     spec_ids_override: (B, k) — oracle speculative set for tests/upper-bound
     benchmarks (bypasses the draft proposal, draft cache still maintained).
     qw: optional quantized-weight bundle (``repro.quant.quantize_params``).
+    shard: optional ShardCtx — routes every full-LM-head reduction (the
+    draft proposal's top-k, the exit verify, the final emit) through the
+    per-shard partial paths (DESIGN.md §9); the predictor-MLP/spec-head
+    gates run replicated per shard.
     """
     spec = model.run.specee
     thresh = spec.exit_threshold if threshold is None else threshold
@@ -213,7 +217,7 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     h_draft, draft_cache = draft_lib.draft_step(
         model.cfg, sw.draft, emb, state.h_last, state.draft_cache, pos)
     spec_ids, _ = draft_lib.propose_topk(model, params, h_draft, k,
-                                         lm_w=lm_w)
+                                         lm_w=lm_w, shard=shard)
     if spec_ids_override is not None:
         spec_ids = spec_ids_override
 
@@ -260,7 +264,8 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                 def verify(args2):
                     exited, exit_token, exit_pt = args2
                     gtok, _ = gate_lib.verify_argmax(hn, lm_w,
-                                                     impl=gate_impl)
+                                                     impl=gate_impl,
+                                                     shard=shard)
                     confirmed = jnp.any(gtok[:, None] == spec_ids, axis=1)
                     newly = would & confirmed
                     exit_token = jnp.where(newly, gtok, exit_token)
@@ -305,7 +310,7 @@ def ar_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     # ---- 5. emit: exited rows use the verified token, others the full head
     # (streamed through the verify kernel when fused — one LM-head pass) ----
     final_tok, _ = gate_lib.verify_argmax(model.final_norm(params, h), lm_w,
-                                          impl=gate_impl)
+                                          impl=gate_impl, shard=shard)
     token = jnp.where(exited, exit_token, final_tok)
     spec_hit = jnp.any(token[:, None] == spec_ids, axis=1)
 
@@ -380,7 +385,7 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
                      state: DecodeState, tree,
                      threshold: Optional[float] = None,
                      node_tokens_override: Optional[jnp.ndarray] = None,
-                     qw=None
+                     qw=None, shard=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, DecodeState,
                                 TreeStepInfo]:
     """One tree-speculative step with hyper-token merged early exit.
@@ -506,8 +511,8 @@ def tree_decode_step(model: Model, params: Params, sw: SpecEEWeights,
     # B·N node rows stream through the verify kernel when fused: one LM-head
     # pass, never a (B, N, V) logits tensor
     hn_nodes = model.final_norm(params, h).reshape(B * N, -1)
-    gtok = gate_lib.verify_argmax(hn_nodes, lm_w,
-                                  impl=gate_impl)[0].reshape(B, N)
+    gtok = gate_lib.verify_argmax(hn_nodes, lm_w, impl=gate_impl,
+                                  shard=shard)[0].reshape(B, N)
 
     rows = jnp.arange(B)
     cur = jnp.zeros((B,), jnp.int32)                        # root
@@ -694,7 +699,7 @@ def init_tree_decode_state(model: Model, params: Params, sw: SpecEEWeights,
 def dense_decode_step(model: Model, params: Params,
                       sw: Optional[SpecEEWeights], state: DecodeState,
                       temperature: float = 0.0, top_k: Optional[int] = None,
-                      qw=None
+                      qw=None, shard=None
                       ) -> Tuple[jnp.ndarray, DecodeState, StepInfo]:
     """One dense (full-depth) decode step.
 
@@ -728,7 +733,7 @@ def dense_decode_step(model: Model, params: Params,
         prng = state.prng
         gate_impl, _ = _gate_impls(model)
         token, _ = gate_lib.verify_argmax(model.final_norm(params, h),
-                                          lm_w, impl=gate_impl)
+                                          lm_w, impl=gate_impl, shard=shard)
     B = token.shape[0]
     E = model.num_exit_points
     new_state = DecodeState(cache=cache, draft_cache=state.draft_cache,

@@ -21,7 +21,7 @@ only ever *index through* an already-populated table.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -108,3 +108,25 @@ def paged_shape(dense_shape: Tuple[int, ...], num_pages: int,
     """Map a dense cache leaf shape (B, S, ...) to its pool shape
     (num_pages, page_size, ...)."""
     return (num_pages, page_size) + tuple(dense_shape[2:])
+
+
+def pool_partition_dims(shape: Tuple[int, ...],
+                        model_extent: int) -> Tuple[Optional[str], ...]:
+    """Mesh-aware pool layout: which dim of a pool leaf shards over the
+    tensor-parallel ('model') mesh axis.
+
+    Page ids index the leading pool dims — (reps?, n_pages, page_size) —
+    so those MUST stay replicated (every shard resolves the same page
+    table); the shardable dims are the trailing per-token feature dims:
+    the KV-head dim when it divides the TP degree, else head_dim, else
+    nothing. Returns a dims tuple for ``PartitionSpec(*dims)``.
+    """
+    dims: list = [None] * len(shape)
+    if model_extent > 1:
+        for cand in (len(shape) - 2, len(shape) - 1):
+            # cand >= 3 keeps (reps, n_pages, page_size) unsharded even for
+            # low-rank leaves (e.g. 4D per-page scale planes)
+            if cand >= 3 and shape[cand] % model_extent == 0:
+                dims[cand] = "model"
+                break
+    return tuple(dims)

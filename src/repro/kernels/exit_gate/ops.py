@@ -42,6 +42,8 @@ from repro.quant import QTensor, unpack_int4
 
 IMPLS = (None, "auto", "kernel", "xla", "ref")
 
+_I32_MAX = 2**31 - 1
+
 
 def resolve_impl(impl: Optional[str], cpu_default: str = "xla") -> str:
     """Backend an ``impl`` request resolves to on the current platform."""
@@ -236,10 +238,146 @@ def _topk_streaming_xla_q(hn: jnp.ndarray, qt: QTensor, k: int,
     return ids, vals
 
 
-@partial(jax.jit, static_argnames=("impl", "block_v", "block_d"))
+# ---------------------------------------------------------------------------
+# sharded verify (tensor-parallel LM head, DESIGN.md §9)
+#
+# The vocab dimension shards over ``shard.axis``; the D contraction never
+# splits, so every per-column logit a shard computes is bit-identical to the
+# single-device value. Each shard reduces its local slice to a tiny partial
+# — (max, argmax) or top-k — inside a purely-local ``shard_map`` body (no
+# collectives; partials concatenate along a leading axis via out_specs), and
+# one (P, B)-sized merge outside reproduces the global tie-break contract:
+# lowest global id among equal maxima (= ``jnp.argmax`` first-occurrence),
+# and ``lax.top_k``'s lower-index-first ordering for top-k.
+# ---------------------------------------------------------------------------
+def _shard_pad(lm_head: jnp.ndarray, degree: int):
+    """Pad the (D, V) head so the vocab splits evenly: -> (padded head,
+    per-shard width, pad columns added). Padded columns are zeros and MUST be
+    masked before any reduction — a zero logit can beat real negatives."""
+    V = lm_head.shape[1]
+    width = -(-V // degree)
+    pad = width * degree - V
+    if pad:
+        lm_head = jnp.pad(lm_head, ((0, 0), (0, pad)))
+    return lm_head, width, pad
+
+
+def _masked_slice_logits(hn, w_local, col0, v_total, dt):
+    """Materialized logits for one vocab slice with padding masked to -inf.
+    ``col0`` is the slice's first GLOBAL column (traced: axis_index * width);
+    ``v_total`` the unpadded vocab size. Matmul in ``dt`` then fp32, the
+    exact compute path of ``verify_*_ref`` (dt=hn.dtype) and of the fp32
+    streaming impls (dt=float32)."""
+    logits = (hn.astype(dt) @ w_local.astype(dt)).astype(jnp.float32)
+    col = col0 + jnp.arange(w_local.shape[1], dtype=jnp.int32)
+    return jnp.where(col[None, :] < v_total, logits, -jnp.inf)
+
+
+def _local_dtype(impl, hn):
+    # "ref" verifies in hn.dtype (the historical materialized matmul);
+    # "xla"/"kernel" accumulate in fp32 (the streaming contract)
+    return hn.dtype if impl == "ref" else jnp.float32
+
+
+def _verify_argmax_sharded(hn, lm_head, shard, impl, block_v, block_d):
+    from repro.sharding import compat
+    P = jax.sharding.PartitionSpec
+    degree = shard.degree
+    wp, width, pad = _shard_pad(lm_head, degree)
+    V = lm_head.shape[1]
+    if block_v is None:
+        block_v = tuning.best_block_v(hn.shape[1], width)
+
+    def local(hn, w_local):
+        # per-shard partial (argmax, max) over the local vocab slice; token
+        # ids are GLOBAL. With padding the masked materialized form is used
+        # for every impl (the pad mask must see global column ids).
+        col0 = jax.lax.axis_index(shard.axis).astype(jnp.int32) * width
+        if pad:
+            logits = _masked_slice_logits(hn, w_local, col0, V,
+                                          _local_dtype(impl, hn))
+            tok = col0 + jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            val = jnp.max(logits, axis=-1)
+        elif impl == "kernel":
+            tok, val = argmax_verify_fused(hn, w_local, block_v=block_v,
+                                           block_d=block_d)
+            tok = tok + col0
+        elif impl == "xla":
+            tok, val = _verify_streaming_xla(hn, w_local, block_v)
+            tok = tok + col0
+        else:
+            tok, val = gate_ref.verify_argmax_ref(hn, w_local,
+                                                  compute_dtype=hn.dtype)
+            tok = tok + col0
+        return tok[None], val[None]                        # (1, B) partials
+
+    toks, vals = compat.shard_map_unchecked(
+        local, shard.mesh,
+        in_specs=(P(), P(None, shard.axis)),
+        out_specs=(P(shard.axis), P(shard.axis)))(hn, wp)
+    # merge (P, B) partials: max value wins; equal maxima take the lowest
+    # global token id — jnp.argmax's first-occurrence contract on the full
+    # logits (a fully-padded shard reports -inf and never wins)
+    best = jnp.max(vals, axis=0)
+    cand = jnp.where(vals == best[None, :], toks, _I32_MAX)
+    return jnp.min(cand, axis=0).astype(jnp.int32), best
+
+
+def _verify_topk_sharded(hn, lm_head, k, shard, impl, block_v, block_d):
+    from repro.sharding import compat
+    P = jax.sharding.PartitionSpec
+    degree = shard.degree
+    wp, width, pad = _shard_pad(lm_head, degree)
+    V = lm_head.shape[1]
+    if k > width:
+        raise ValueError(
+            f"verify_topk: k={k} exceeds the per-shard vocab slice "
+            f"({V} cols / {degree} shards = {width}); every global top-k "
+            "entry must be inside its shard's local top-k")
+    if block_v is None:
+        block_v = tuning.best_block_v(hn.shape[1], width)
+
+    def local(hn, w_local):
+        col0 = jax.lax.axis_index(shard.axis).astype(jnp.int32) * width
+        if pad:
+            logits = _masked_slice_logits(hn, w_local, col0, V,
+                                          _local_dtype(impl, hn))
+            vals, sel = jax.lax.top_k(logits, k)
+            ids = col0 + sel.astype(jnp.int32)
+        elif impl == "kernel":
+            from repro.kernels.exit_gate.exit_gate import topk_verify_fused
+            ids, vals = topk_verify_fused(hn, w_local, k, block_v=block_v,
+                                          block_d=block_d)
+            ids = ids + col0
+        elif impl == "xla":
+            ids, vals = _topk_streaming_xla(hn, w_local, k, block_v)
+            ids = ids + col0
+        else:
+            ids, vals = gate_ref.verify_topk_ref(hn, w_local, k,
+                                                 compute_dtype=hn.dtype)
+            ids = ids + col0
+        return ids[None], vals[None]                      # (1, B, k)
+
+    ids, vals = compat.shard_map_unchecked(
+        local, shard.mesh,
+        in_specs=(P(), P(None, shard.axis)),
+        out_specs=(P(shard.axis), P(shard.axis)))(hn, wp)
+    # (P, B, k) -> shard-major (B, P·k) pool: within a shard local top-k is
+    # id-ascending among equal values and shards are id-ascending, so
+    # lax.top_k's lower-index-first tie-break reproduces the global contract
+    B = hn.shape[0]
+    pool_v = jnp.transpose(vals, (1, 0, 2)).reshape(B, degree * k)
+    pool_i = jnp.transpose(ids, (1, 0, 2)).reshape(B, degree * k)
+    nvals, sel = jax.lax.top_k(pool_v, k)
+    nids = jnp.take_along_axis(pool_i, sel, axis=1)
+    return nids.astype(jnp.int32), nvals
+
+
+@partial(jax.jit, static_argnames=("impl", "block_v", "block_d", "shard"))
 def verify_argmax(hn: jnp.ndarray, lm_head,
                   impl: Optional[str] = None, block_v: Optional[int] = None,
-                  block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  block_d: int = 512, shard=None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-LM-head argmax for verification. hn: (B, D); lm_head: (D, V).
 
     "kernel"/"xla" stream the vocab dimension with fp32 accumulation and
@@ -250,9 +388,17 @@ def verify_argmax(hn: jnp.ndarray, lm_head,
     moot. ``block_v=None`` takes the autotuned vocab-strip width for this
     (D, V) from ``tuning.best_block_v`` (swept by ``hillclimb.py
     --gate-blocks``, cached in repro/configs/gate_blocks.json).
+    ``shard``: optional ``repro.sharding.ctx.ShardCtx`` — verify as a
+    per-shard partial reduction over the local vocab slice + one tiny merge
+    (bit-identical to single-device under any vocab split; see DESIGN.md
+    §9). Quantized heads stay on the unsharded path (QTensor tiles ride
+    replicated under a mesh).
     Returns (token (B,) int32, max logit (B,) fp32).
     """
     impl = _resolve(impl, cpu_default="ref")
+    if shard is not None and not isinstance(lm_head, QTensor):
+        return _verify_argmax_sharded(hn, lm_head, shard, impl, block_v,
+                                      block_d)
     if isinstance(lm_head, QTensor):
         if block_v is None:
             block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[-1],
@@ -310,10 +456,12 @@ def _topk_streaming_xla(hn: jnp.ndarray, lm_head: jnp.ndarray, k: int,
     return ids, vals
 
 
-@partial(jax.jit, static_argnames=("k", "impl", "block_v", "block_d"))
+@partial(jax.jit,
+         static_argnames=("k", "impl", "block_v", "block_d", "shard"))
 def verify_topk(hn: jnp.ndarray, lm_head, k: int,
                 impl: Optional[str] = None, block_v: Optional[int] = None,
-                block_d: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                block_d: int = 512, shard=None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-LM-head top-k — the streaming sibling of ``verify_argmax`` for
     the draft proposal path. hn: (B, D); lm_head: (D, V).
 
@@ -323,9 +471,15 @@ def verify_topk(hn: jnp.ndarray, lm_head, k: int,
     resolves like ``verify_argmax`` (kernel on TPU, ref on CPU).
     ``block_v=None`` takes the autotuned strip width (the top-k kernel
     shares the argmax kernel's tiling knobs — same sweep, same table).
+    ``shard``: optional ShardCtx — per-shard partial top-k over the local
+    vocab slice merged by one tiny ``lax.top_k`` over the (B, P·k) pool
+    (same tie contract as the single-device path; see ``verify_argmax``).
     Returns (ids (B, k) int32, vals (B, k) fp32), descending by logit.
     """
     impl = _resolve(impl, cpu_default="ref")
+    if shard is not None and not isinstance(lm_head, QTensor):
+        return _verify_topk_sharded(hn, lm_head, k, shard, impl, block_v,
+                                    block_d)
     if isinstance(lm_head, QTensor):
         if block_v is None:
             block_v = tuning.best_block_v(hn.shape[1], lm_head.shape[-1],

@@ -28,4 +28,29 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     devices = jax.devices()[: data * model]
+    if len(devices) < data * model:
+        raise RuntimeError(
+            f"mesh ({data},{model}) needs {data * model} devices, found "
+            f"{len(devices)} — run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model}")
     return make_mesh((data, model), ("data", "model"), devices=devices)
+
+
+def make_replica_meshes(replicas: int, model: int = 1):
+    """Disjoint per-replica (1, model) meshes for a ``ReplicaPool``: replica
+    i owns devices [i·model, (i+1)·model) — tensor parallelism within a
+    replica, pure data parallelism (no collective) across them. ``model=1``
+    with one device total returns ``[None] * replicas`` (replicas time-share
+    the device — the CPU smoke-test degeneration)."""
+    need = replicas * model
+    devices = jax.devices()
+    if model == 1 and len(devices) == 1:
+        return [None] * replicas
+    if len(devices) < need:
+        raise RuntimeError(
+            f"{replicas} replicas × model={model} need {need} devices, "
+            f"found {len(devices)} — run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    return [make_mesh((1, model), ("data", "model"),
+                      devices=devices[i * model:(i + 1) * model])
+            for i in range(replicas)]

@@ -100,7 +100,42 @@ def main() -> None:
                     help="PRNG seed for the session (--temperature > 0)")
     ap.add_argument("--trained", action="store_true",
                     help="train draft+predictors first (slower start)")
+    ap.add_argument("--mesh", default="1,1", metavar="DATA,MODEL",
+                    help="decode mesh shape; MODEL > 1 turns on tensor-"
+                         "parallel decode (DESIGN.md §9). Without real "
+                         "accelerators the launcher forces host devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N) so CPU smoke runs exercise the same "
+                         "sharded program")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel ServingEngine replicas behind one "
+                         "shared queue (ReplicaPool); each replica gets its "
+                         "own disjoint MODEL-wide device slice")
     args = ap.parse_args()
+    try:
+        data_par, model_par = (int(x) for x in args.mesh.split(","))
+    except ValueError:
+        ap.error(f"--mesh must be DATA,MODEL ints, got {args.mesh!r}")
+    if data_par != 1:
+        ap.error("--mesh DATA must be 1: data parallelism is --replicas "
+                 "(independent engines), not an in-engine mesh axis")
+    if model_par < 1 or args.replicas < 1:
+        ap.error("--mesh MODEL and --replicas must be >= 1")
+    need_devices = args.replicas * model_par
+    if need_devices > 1:
+        # host-mesh fallback: must land in XLA_FLAGS before the first jax
+        # backend touch (the heavy imports below). A real TPU/GPU fleet is
+        # unaffected — the flag only multiplies the CPU platform.
+        import os
+        import re
+        flags = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+        if m is None or int(m.group(1)) < need_devices:
+            flags = re.sub(
+                r"--xla_force_host_platform_device_count=\d+", "", flags)
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{need_devices}").strip()
     mode = "dense" if args.no_specee else args.mode
     if args.ci:
         args.requests = min(args.requests, 4)
@@ -111,6 +146,11 @@ def main() -> None:
         # the injected preemption is recovered in-process, which needs
         # somewhere to put the checkpoint
         args.checkpoint_dir = tempfile.mkdtemp(prefix="serve-ckpt-")
+    if args.replicas > 1 and (args.checkpoint_dir or args.restore
+                              or args.inject is not None):
+        ap.error("--replicas composes with in-pool failover (a dead "
+                 "replica's requests migrate to survivors), not with the "
+                 "single-engine --checkpoint-dir/--restore/--inject paths")
 
     # arm SIGTERM before the heavy startup (jax import + model build +
     # tracing can run for minutes): a preemption landing mid-build must
@@ -162,7 +202,7 @@ def main() -> None:
                             int(rng.integers(4, 16)))
                for _ in range(args.requests)]
 
-    def make_engine(megatick: int, checkpoint_dir=None):
+    def make_engine(megatick: int, checkpoint_dir=None, mesh=None):
         return ServingEngine(model, params, sw, strategy=strategy,
                              prng_seed=args.seed,
                              fused_gate=not args.no_fused_gate,
@@ -172,10 +212,12 @@ def main() -> None:
                              async_ticks=False if args.sync_ticks else None,
                              checkpoint_dir=checkpoint_dir,
                              guard=guard if checkpoint_dir else None,
-                             quant=args.quant)
+                             quant=args.quant, mesh=mesh)
 
-    def run_engine(megatick: int, checkpoint_dir=None, restore=False):
-        engine = make_engine(megatick, checkpoint_dir=checkpoint_dir)
+    def run_engine(megatick: int, checkpoint_dir=None, restore=False,
+                   mesh=None):
+        engine = make_engine(megatick, checkpoint_dir=checkpoint_dir,
+                             mesh=mesh)
         restored = restore and engine.restore_checkpoint()
         if restored:
             print(f"[serve] restored tick {engine._tick} from "
@@ -210,9 +252,47 @@ def main() -> None:
         schedule = FaultSchedule.once(args.inject, visit=1)
     inj = faultinject.install(schedule) if schedule else None
 
+    # ----- data-parallel replica pool (--replicas R) -----
+    if args.replicas > 1:
+        from repro.launch.mesh import make_replica_meshes
+        from repro.serving import ReplicaPool
+        meshes = make_replica_meshes(args.replicas, model_par)
+        pool = ReplicaPool([make_engine(args.megatick, mesh=ms)
+                            for ms in meshes])
+        prs = [pool.submit(p, max_new_tokens=args.max_new) for p in prompts]
+        t0 = time.perf_counter()
+        pool.run_to_completion()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in pool.completed)
+        print(f"[serve] {len(pool.completed)} requests, {toks} tokens in "
+              f"{dt:.2f}s ({toks/dt:.1f} tok/s, replicas={args.replicas}, "
+              f"mesh=(1,{model_par}), mode={mode}, "
+              f"megatick={args.megatick})")
+        if args.ci:
+            assert len(pool.completed) == args.requests, \
+                f"CI smoke: {len(pool.completed)}/{args.requests} completed"
+            assert all(r.done and len(r.output) == args.max_new
+                       for r in prs), \
+                "CI smoke: a pooled request missed its token budget"
+            ref_engine, _ = run_engine(1)
+            ref = [r.output for r in sorted(ref_engine.completed,
+                                            key=lambda r: r.uid)]
+            got = [list(pr.output) for pr in prs]
+            assert got == ref, \
+                "CI smoke: pool tokens diverge from the single-engine " \
+                "reference"
+            print("[serve] CI smoke OK (replica-pool token parity with the "
+                  "single-engine reference)")
+        pool.close()
+        return
+
+    mesh = None
+    if model_par > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(1, model_par)
     engine, dt = run_engine(args.megatick,
                             checkpoint_dir=args.checkpoint_dir,
-                            restore=args.restore)
+                            restore=args.restore, mesh=mesh)
     faultinject.uninstall()
     done = engine.completed
     toks = sum(len(r.output) for r in done)
@@ -242,7 +322,8 @@ def main() -> None:
         # fused/pipelined runs must all emit exactly what the plain
         # per-tick fault-free loop emits
         need_ref = (args.megatick > 1 or args.restore
-                    or args.inject is not None or args.num_pages is not None)
+                    or args.inject is not None or args.num_pages is not None
+                    or model_par > 1)
         if need_ref:
             ref_engine, _ = run_engine(1)
             got = {r.uid: r.output for r in done}

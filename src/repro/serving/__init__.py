@@ -1,6 +1,8 @@
+from repro.serving.replica import PoolRequest, ReplicaPool
 from repro.serving.resilience import (Backoff, FaultEvent, Preempted,
                                       ServingFault, VictimInfo, VictimPolicy)
 from repro.serving.server import Request, ServingEngine
 
-__all__ = ["Backoff", "FaultEvent", "Preempted", "Request", "ServingEngine",
-           "ServingFault", "VictimInfo", "VictimPolicy"]
+__all__ = ["Backoff", "FaultEvent", "PoolRequest", "Preempted", "ReplicaPool",
+           "Request", "ServingEngine", "ServingFault", "VictimInfo",
+           "VictimPolicy"]

@@ -1,0 +1,246 @@
+"""Data-parallel replica pool — N ``ServingEngine``s behind one queue.
+
+The sharding story (DESIGN.md §9) splits cleanly in two: WITHIN a replica,
+tensor parallelism over the mesh's 'model' axis (``ServingEngine(mesh=...)``)
+keeps decode token-identical to single-device; ACROSS replicas, this pool
+provides throughput scaling with no cross-replica collective at all —
+replicas share weights by construction (same params pytree, one mesh each)
+and requests are whole units, so the only shared state is the admission
+queue.
+
+Fault tolerance composes with PR 6's recompute replay: when a replica dies
+(``Preempted`` / ``ServingFault`` out of its ``step``) or is evicted as a
+straggler (``runtime.fault.StragglerMonitor`` over per-replica step times),
+its in-flight requests requeue onto survivors via ``ServingEngine.adopt`` —
+the survivor re-prefills each request and *verifies* the tokens the dead
+replica already emitted against the record (decode is deterministic and the
+replicas share weights), so a migration costs recompute but never changes
+output. ``plan_remesh`` annotates each kill with the post-failure mesh the
+fleet could rebuild to.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.fault import StragglerMonitor, plan_remesh
+from repro.serving.resilience import FaultEvent, Preempted, ServingFault
+from repro.serving.server import Request, ServingEngine
+
+
+@dataclass
+class PoolRequest:
+    """One request as the pool sees it.
+
+    ``handle`` is the engine-level ``Request`` on the owning replica; the
+    pool's own ``output``/stats fields are the migration-safe record —
+    snapshotted from the handle when the owner dies, fed back as the replay
+    prefix (``adopt(recorded=...)``) on reassignment."""
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    replica: Optional[int] = None
+    handle: Optional[Request] = None
+    output: List[int] = field(default_factory=list)
+    exit_points: List[int] = field(default_factory=list)
+    accept_lens: List[int] = field(default_factory=list)
+    done: bool = False
+    migrations: int = 0
+
+
+class ReplicaPool:
+    """Shared admission queue over N independent ``ServingEngine`` replicas.
+
+    ``step()`` drives every live replica one engine tick, timing each for
+    the straggler monitor; replica death (or straggler eviction) requeues
+    its unfinished requests onto survivors with verified replay. Killing
+    the LAST live replica raises — there is nowhere left to migrate.
+    """
+
+    def __init__(self, replicas: Sequence[ServingEngine],
+                 monitor: Optional[StragglerMonitor] = None,
+                 evict_stragglers: bool = True):
+        if not replicas:
+            raise ValueError("ReplicaPool needs at least one replica")
+        self.replicas: List[ServingEngine] = list(replicas)
+        self.alive: List[bool] = [True] * len(self.replicas)
+        self.monitor = (monitor if monitor is not None
+                        else StragglerMonitor())
+        self.evict_stragglers = bool(evict_stragglers)
+        self.queue: List[PoolRequest] = []
+        self.requests: Dict[int, PoolRequest] = {}
+        self.completed: List[PoolRequest] = []
+        self.fault_log: List[FaultEvent] = []
+        self._next_uid = 0
+        self._tick = 0
+
+    # ----- intake / placement -----
+    def submit(self, prompt, max_new_tokens: int = 32,
+               eos_token: Optional[int] = None) -> PoolRequest:
+        pr = PoolRequest(uid=self._next_uid,
+                         prompt=np.asarray(prompt, np.int32),
+                         max_new_tokens=max_new_tokens, eos_token=eos_token)
+        self._next_uid += 1
+        self.requests[pr.uid] = pr
+        self.queue.append(pr)
+        return pr
+
+    def live_replicas(self) -> List[int]:
+        return [i for i, a in enumerate(self.alive) if a]
+
+    def _capacity(self, i: int) -> int:
+        """Free slots minus admission backlog — the placement score."""
+        eng = self.replicas[i]
+        free = sum(1 for s in eng.slots if s is None)
+        backlog = len(eng.scheduler.queued) + len(eng.scheduler.admitting)
+        return free - backlog
+
+    def _assign(self) -> None:
+        """Drain the shared queue onto the emptiest live replicas. A
+        re-queued (migrated) request carries its recorded tokens as the
+        replay prefix — ``adopt`` with an empty record is a plain submit."""
+        live = self.live_replicas()
+        if not live:
+            return
+        while self.queue:
+            pr = self.queue.pop(0)
+            i = max(live, key=self._capacity)
+            pr.replica = i
+            pr.handle = self.replicas[i].adopt(
+                pr.prompt, max_new_tokens=pr.max_new_tokens,
+                eos_token=pr.eos_token, recorded=pr.output,
+                stats=(pr.exit_points, pr.accept_lens))
+
+    # ----- failure / migration -----
+    def _snapshot_handle(self, pr: PoolRequest) -> None:
+        h = pr.handle
+        if h is None:
+            return
+        pr.output = [int(t) for t in h.output]
+        pr.exit_points = [int(x) for x in h.exit_points]
+        pr.accept_lens = [int(x) for x in h.accept_lens]
+
+    def _tp_degree(self) -> int:
+        shard = self.replicas[0].engine.shard
+        return shard.degree if shard is not None else 1
+
+    def kill_replica(self, i: int, reason: str = "killed",
+                     detail: str = "") -> None:
+        """Mark replica ``i`` dead and requeue its unfinished requests.
+
+        Each migrated request keeps everything the dead replica emitted
+        (snapshotted off its handle) and will replay-verify those tokens on
+        the survivor. Requests whose handle already finished complete
+        normally. Raises when the pool's last live replica dies."""
+        if not self.alive[i]:
+            return
+        self.alive[i] = False
+        requeued = 0
+        for pr in self.requests.values():
+            if pr.done or pr.replica != i:
+                continue
+            self._snapshot_handle(pr)
+            if pr.handle is not None and pr.handle.done:
+                pr.done = True
+                self.completed.append(pr)
+                continue
+            pr.replica = None
+            pr.handle = None
+            pr.migrations += 1
+            self.queue.append(pr)
+            requeued += 1
+        try:
+            self.replicas[i].close()
+        except Exception:
+            pass
+        tp = self._tp_degree()
+        plan = plan_remesh(len(self.live_replicas()) * tp, tp)
+        self.fault_log.append(FaultEvent(
+            site=reason, tick=self._tick, action="kill_replica",
+            detail=f"replica={i} requeued={requeued} remesh={plan}; "
+                   f"{detail}"))
+        if not any(self.alive):
+            raise ServingFault(
+                "replica_pool",
+                f"last replica ({i}) died ({reason}); "
+                f"{requeued} requests stranded")
+
+    def _maybe_evict_straggler(self) -> None:
+        """Evict the slowest monitor-flagged live replica (never the last):
+        its requests migrate to faster survivors instead of pacing the whole
+        pool at the straggler's EWMA."""
+        if not self.evict_stragglers:
+            return
+        live = self.live_replicas()
+        if len(live) < 2:
+            return
+        flagged = [h for h in self.monitor.stragglers()
+                   if h in live]
+        if not flagged:
+            return
+        worst = max(flagged, key=lambda h: self.monitor.hosts[h].ewma)
+        self.kill_replica(worst, reason="straggler",
+                          detail=f"ewma={self.monitor.hosts[worst].ewma:.4f}")
+
+    # ----- drive -----
+    def step(self) -> List[PoolRequest]:
+        """One pool tick: place queued work, step every live busy replica
+        (timed for the straggler monitor; death → migrate), collect
+        completions, then straggler eviction. Returns the requests that
+        completed this call."""
+        self._tick += 1
+        self._assign()
+        for i in list(self.live_replicas()):
+            eng = self.replicas[i]
+            if not eng.busy:
+                continue
+            t0 = time.monotonic()
+            try:
+                eng.step()
+            except Preempted as err:
+                self.kill_replica(i, reason="preempted", detail=str(err))
+                continue
+            except ServingFault as err:
+                self.kill_replica(i, reason=err.site, detail=str(err))
+                continue
+            self.monitor.record(i, time.monotonic() - t0)
+        finished: List[PoolRequest] = []
+        for pr in self.requests.values():
+            if pr.done or pr.handle is None or not pr.handle.done:
+                continue
+            self._snapshot_handle(pr)
+            pr.done = True
+            self.completed.append(pr)
+            finished.append(pr)
+        self._maybe_evict_straggler()
+        self._assign()          # migrated work lands without an extra tick
+        return finished
+
+    @property
+    def busy(self) -> bool:
+        return (bool(self.queue)
+                or any(not pr.done for pr in self.requests.values()))
+
+    def run_to_completion(self, max_ticks: int = 10_000
+                          ) -> List[PoolRequest]:
+        done: List[PoolRequest] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.busy:
+                return done
+        raise ServingFault(
+            "stall",
+            f"pool still busy after {max_ticks} ticks: "
+            f"queued={len(self.queue)} "
+            f"live={len(self.live_replicas())}/{len(self.replicas)}")
+
+    def close(self) -> None:
+        for i in self.live_replicas():
+            try:
+                self.replicas[i].close()
+            except Exception:
+                pass

@@ -130,7 +130,8 @@ class ServingEngine:
                  watchdog_s: Optional[float] = None,
                  backoff: Optional[Backoff] = None,
                  cooldown_ticks: int = 8,
-                 quant=None):
+                 quant=None,
+                 mesh=None, policy: str = "tp_dp"):
         spec = CacheSpec.resolve(cache, model.run.serve)
         if page_size is not None:
             # the override obeys the same rule ServeConfig validates at
@@ -167,8 +168,12 @@ class ServingEngine:
         # ``quant``: None | "int8" | "int4" | QuantSpec — weight-only
         # compression applied once at engine build (parallel pytree; the
         # fp params are untouched and stay the checkpoint of record)
+        # ``mesh``: a 2-D ("data","model") jax Mesh turns on tensor-parallel
+        # decode for THIS engine (DESIGN.md §9); data parallelism lives one
+        # level up in ``repro.serving.replica.ReplicaPool``
         self.engine = Engine.create(model, params, sw=sw,
-                                    strategy=self.strategy, quant=quant)
+                                    strategy=self.strategy, quant=quant,
+                                    mesh=mesh, policy=policy)
         B = self.serve_cfg.max_batch
         S = self.serve_cfg.max_seq_len
         self.B, self.S = B, S
@@ -219,6 +224,33 @@ class ServingEngine:
         req = Request(uid=self._next_uid,
                       prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, eos_token=eos_token)
+        self._next_uid += 1
+        self._inflight[req.uid] = req
+        self.scheduler.submit(req.uid, req.prompt,
+                              max_new_tokens=req.max_new_tokens,
+                              eos_token=req.eos_token)
+        return req
+
+    def adopt(self, prompt: np.ndarray, max_new_tokens: int = 32,
+              eos_token: Optional[int] = None, recorded=(),
+              stats=None) -> Request:
+        """Admit a request that already emitted ``recorded`` tokens on
+        ANOTHER engine (replica failover, DESIGN.md §9). The request
+        re-prefills here and its first ``len(recorded)`` tokens run as
+        verified replay — the PR-6 recompute invariant, which holds across
+        replicas because they share weights and decode is deterministic —
+        before new tokens append. ``stats`` optionally seeds the
+        (exit_points, accept_lens) recorded so far, so the finished request's
+        stats match an uninterrupted run. Empty ``recorded`` behaves exactly
+        like ``submit``."""
+        req = Request(uid=self._next_uid,
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_token=eos_token,
+                      output=[int(t) for t in recorded],
+                      replay_total=len(recorded), replayed=0)
+        if stats is not None:
+            req.exit_points = [int(x) for x in stats[0]]
+            req.accept_lens = [int(x) for x in stats[1]]
         self._next_uid += 1
         self._inflight[req.uid] = req
         self.scheduler.submit(req.uid, req.prompt,

@@ -41,3 +41,15 @@ def shard_map(f, mesh, in_specs, out_specs, **kwargs):
     if sm is None:
         from jax.experimental.shard_map import shard_map as sm
     return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off — required when the body
+    contains ops without a replication rule (``pallas_call``). The kwarg is
+    ``check_rep`` on 0.4.x and ``check_vma`` on newer jax; try both, and fall
+    back to the default checker if neither name exists."""
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return shard_map(f, mesh, in_specs, out_specs, **kw)
+        except TypeError:
+            continue

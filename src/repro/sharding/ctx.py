@@ -1,0 +1,48 @@
+"""Shard context — the one hashable handle the decode hot path threads.
+
+``ShardCtx`` rides through the jitted strategy step as a STATIC argument
+(``jax.sharding.Mesh`` hashes by device assignment + axis names), so the
+exit-gate entry points can open a ``shard_map`` region over the mesh's
+tensor-parallel axis without the engine layers knowing anything about
+partitioning beyond "a mesh is active". Threading it explicitly (rather
+than ambient module state) matters because ``verify_argmax``/``verify_topk``
+are module-level jits shared by every Engine in the process: the mesh must
+key their compilation caches.
+
+Leaf module on purpose: imports jax only, so the kernel wrappers can use it
+without dragging in the model/policy stack (ops.py -> policies -> model
+would be an import cycle).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Tensor-parallel context for the decode step.
+
+    mesh: the serving mesh; ``axis`` names the dimension vocab/head dims
+        shard over. Other mesh axes (e.g. a trivial 'data' axis) must hold
+        the decode state replicated — the sharded-verify region only
+        partitions along ``axis``.
+    """
+    mesh: Mesh
+    axis: str = "model"
+
+    @property
+    def degree(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @staticmethod
+    def from_mesh(mesh: Optional[Mesh],
+                  axis: str = "model") -> Optional["ShardCtx"]:
+        """None / missing axis / degree-1 mesh -> None (sharding inactive),
+        so every caller can treat ``shard is None`` as the single-device
+        path and a (1, 1) mesh costs nothing."""
+        if mesh is None or axis not in mesh.shape or mesh.shape[axis] <= 1:
+            return None
+        return ShardCtx(mesh=mesh, axis=axis)

@@ -340,3 +340,113 @@ def test_watchdog_slow_finish_falls_back_to_sync(setup):
     assert falls and falls[0].site == "watchdog"
     assert _outputs(se) == _outputs(ref)
     _assert_no_leak(se)
+
+
+# ---------------- data-parallel replica pool (DESIGN.md §9) ----------------
+def _pool_engines(m, params, sw, n, **kw):
+    kw.setdefault("strategy", "specee")
+    kw.setdefault("megatick", 2)
+    return [ServingEngine(m, params, sw, **kw) for _ in range(n)]
+
+
+def _pool_outputs(prs):
+    return [list(pr.output) for pr in prs]
+
+
+def _single_ref(m, params, sw, prompts, max_new=8):
+    se = _serve(m, params, sw, prompts, max_new=max_new, strategy="specee",
+                megatick=2)
+    return [list(r.output)
+            for r in sorted(se.completed, key=lambda r: r.uid)]
+
+
+def test_replica_pool_token_parity(setup):
+    """N independent replicas behind one queue emit exactly what one engine
+    emits per request — data parallelism must not change tokens."""
+    from repro.serving import ReplicaPool
+    run, m, params, sw = setup
+    prompts = _prompts(run, n=4, seed=21)
+    ref = _single_ref(m, params, sw, prompts)
+    pool = ReplicaPool(_pool_engines(m, params, sw, 2))
+    prs = [pool.submit(p, max_new_tokens=8) for p in prompts]
+    pool.run_to_completion()
+    assert _pool_outputs(prs) == ref
+    assert all(pr.migrations == 0 for pr in prs)
+    pool.close()
+
+
+@pytest.mark.parametrize("kill_tick", [1, 2, 3])
+def test_replica_pool_kill_mid_flight_parity(setup, kill_tick):
+    """Property (acceptance): killing a replica at any point mid-decode
+    requeues its in-flight requests onto survivors, which complete them
+    token-identical to an uninterrupted single-engine run — the already-
+    emitted tokens run as VERIFIED replay on the survivor."""
+    from repro.serving import ReplicaPool
+    run, m, params, sw = setup
+    prompts = _prompts(run, n=4, seed=22)
+    ref = _single_ref(m, params, sw, prompts)
+    pool = ReplicaPool(_pool_engines(m, params, sw, 2))
+    prs = [pool.submit(p, max_new_tokens=8) for p in prompts]
+    for _ in range(kill_tick):
+        pool.step()
+    victims = [i for i in pool.live_replicas()
+               if any(pr.replica == i and not pr.done
+                      for pr in pool.requests.values())]
+    progress_at_kill = {}
+    if victims:
+        v = victims[0]
+        for pr in pool.requests.values():
+            if pr.replica == v and not pr.done and pr.handle is not None:
+                progress_at_kill[pr.uid] = len(pr.handle.output)
+        pool.kill_replica(v, reason="test_kill")
+    pool.run_to_completion()
+    assert _pool_outputs(prs) == ref
+    if victims:
+        migrated = [pr for pr in prs if pr.migrations]
+        assert migrated, "kill evicted a replica but nothing migrated"
+        assert any(e.action == "kill_replica" for e in pool.fault_log)
+        for pr in migrated:
+            h = pr.handle
+            # the survivor replay-verified every token recorded pre-kill
+            assert h is not None and h.replay_total >= \
+                progress_at_kill.get(pr.uid, 0)
+            assert h.replayed == h.replay_total
+    pool.close()
+
+
+def test_replica_pool_straggler_eviction(setup):
+    """A replica whose step-time EWMA drifts above the fleet is evicted
+    (never the last live one); its requests migrate and the run still
+    matches the single-engine reference."""
+    from repro.runtime.fault import StragglerMonitor
+    from repro.serving import ReplicaPool
+    run, m, params, sw = setup
+    prompts = _prompts(run, n=4, seed=23)
+    ref = _single_ref(m, params, sw, prompts)
+    monitor = StragglerMonitor(min_samples=2)
+    # seed the fleet: replicas 0/1 fast, replica 2 pathologically slow
+    for _ in range(2):
+        monitor.record(0, 0.01)
+        monitor.record(1, 0.01)
+        monitor.record(2, 50.0)
+    pool = ReplicaPool(_pool_engines(m, params, sw, 3), monitor=monitor)
+    prs = [pool.submit(p, max_new_tokens=8) for p in prompts]
+    pool.run_to_completion()
+    assert _pool_outputs(prs) == ref
+    kills = [e for e in pool.fault_log if e.action == "kill_replica"]
+    assert kills and kills[0].site == "straggler"
+    assert not pool.alive[2] and pool.alive[0] and pool.alive[1]
+    pool.close()
+
+
+def test_replica_pool_last_replica_death_raises(setup):
+    """Killing the only live replica has nowhere to migrate — it must raise
+    a structured ServingFault, not strand the queue silently."""
+    from repro.serving import ReplicaPool
+    run, m, params, sw = setup
+    pool = ReplicaPool(_pool_engines(m, params, sw, 1))
+    pool.submit(_prompts(run, n=1)[0], max_new_tokens=4)
+    pool.step()
+    with pytest.raises(ServingFault) as ei:
+        pool.kill_replica(0, reason="test_kill")
+    assert ei.value.site == "replica_pool"

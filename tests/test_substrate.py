@@ -252,9 +252,10 @@ print("MULTIDEV-OK")
 
 
 def test_collectives_multidevice():
-    env = dict(os.environ, PYTHONPATH="src")
+    # pin cpu explicitly: with libtpu installed, an unset JAX_PLATFORMS
+    # makes the child spin in TPU-client discovery instead of running
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     env.pop("XLA_FLAGS", None)
-    env.pop("JAX_PLATFORMS", None)
     r = subprocess.run([sys.executable, "-c", _MULTIDEV], cwd=os.path.dirname(
         os.path.dirname(os.path.abspath(__file__))), env=env,
         capture_output=True, text=True, timeout=600)

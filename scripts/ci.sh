@@ -81,6 +81,21 @@ if [ "$#" -eq 0 ]; then
       python -m repro.launch.serve --ci --megatick 4 --inject "$SITE"
   done
 
+  # elastic remesh smoke (DESIGN.md §10): lose a device out of a TP=2 mesh
+  # mid-decode — the engine must remesh to TP=1 in place (not die), finish
+  # every request token-identical to the unsharded fault-free reference,
+  # and export a non-empty JSONL fault trail.
+  echo "[ci] launch/serve.py --ci --inject device_lost --mesh 1,2 (remesh smoke)"
+  FLOG="$(mktemp)"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --ci --megatick 4 --mesh 1,2 \
+      --inject device_lost --fault-log "$FLOG"
+  if ! grep -q '"action": "remesh"' "$FLOG"; then
+    echo "[ci] remesh smoke: no remesh event in fault log $FLOG" >&2
+    exit 1
+  fi
+  rm -f "$FLOG"
+
   # sharded serving smoke (DESIGN.md §9): tensor-parallel megatick on forced
   # host devices — --ci asserts token parity against an unsharded reference
   # run in the same process; then a 2-replica data-parallel pool whose
@@ -99,4 +114,12 @@ if [ "$#" -eq 0 ]; then
   echo "[ci] bench_serving --gate (decode_tok_s regression gate)"
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving --gate
+
+  # exit-gate perf gate (ROADMAP item 5): re-measure the fused gate and the
+  # quantized streaming verify against the committed BENCH_exit_gate.json
+  # row groups; quant_pareto quality (match_vs_dense_fp32 == 1.0) is
+  # checked statically. The interpret-mode Pallas column is never re-timed.
+  echo "[ci] bench_predictor --gate (exit-gate regression gate)"
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_predictor --gate
 fi

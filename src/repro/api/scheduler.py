@@ -135,6 +135,17 @@ class ChunkedPrefillScheduler:
             self.deferred_ticks = 0
         return events
 
+    def remove(self, uid: int) -> bool:
+        """Withdraw a queued request (deadline shedding / cancel). Only the
+        queue is searched — abort the in-flight admission first if it holds
+        the uid (``abort_active`` requeues it here). Returns True when the
+        uid was queued."""
+        for p in list(self.queue):
+            if p.uid == uid:
+                self.queue.remove(p)
+                return True
+        return False
+
     def abort_active(self) -> Optional[int]:
         """Abort the in-flight chunked admission, requeueing its request at
         the queue FRONT (it keeps its turn). Safe at any point mid-prefill:

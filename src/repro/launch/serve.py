@@ -12,9 +12,14 @@ Fault tolerance (DESIGN.md §7):
     --restore            resume the latest snapshot in D token-identically
     --inject SITE        deterministic fault injection at one named site
                          (dispatch / finish_timeout / nan_logits /
-                         pool_exhausted / sigterm) — the run must still
-                         complete every request, and --ci verifies the
-                         outputs against an in-process fault-free reference
+                         pool_exhausted / sigterm / device_lost) — the run
+                         must still complete every request, and --ci
+                         verifies the outputs against an in-process
+                         fault-free reference. ``device_lost`` needs a
+                         tensor-parallel mesh (--mesh 1,2): the engine
+                         remeshes to a lower TP degree (DESIGN.md §10)
+    --fault-log PATH     dump the engine's FaultEvent ring to PATH as JSONL
+                         after the run (the machine-readable post-mortem)
     --num-pages N        oversubscribe the paged pool (fewer pages than
                          max_batch rows need) to drive victim eviction
 
@@ -84,6 +89,10 @@ def main() -> None:
                     choices=list(faultinject.SITES),
                     help="deterministically inject one fault at the named "
                          "site; the run must still complete (recovery path)")
+    ap.add_argument("--fault-log", default=None, metavar="PATH",
+                    help="write the FaultEvent recovery trail to PATH as "
+                         "JSONL after the run (engine + pool + per-replica "
+                         "sources in one file)")
     ap.add_argument("--ci", action="store_true",
                     help="CI smoke: few short requests + completion asserts")
     ap.add_argument("--ticks-per-check", type=int, default=1,
@@ -146,6 +155,11 @@ def main() -> None:
         # the injected preemption is recovered in-process, which needs
         # somewhere to put the checkpoint
         args.checkpoint_dir = tempfile.mkdtemp(prefix="serve-ckpt-")
+    if args.inject == "device_lost" and model_par <= 1:
+        ap.error("--inject device_lost needs a tensor-parallel mesh to "
+                 "degrade (e.g. --mesh 1,2): an unsharded engine has no "
+                 "surviving devices to remesh onto and the fault is "
+                 "terminal")
     if args.replicas > 1 and (args.checkpoint_dir or args.restore
                               or args.inject is not None):
         ap.error("--replicas composes with in-pool failover (a dead "
@@ -283,6 +297,13 @@ def main() -> None:
                 "reference"
             print("[serve] CI smoke OK (replica-pool token parity with the "
                   "single-engine reference)")
+        if args.fault_log:
+            n = pool.fault_log.dump_jsonl(args.fault_log, source="pool")
+            for i, rep in enumerate(pool.replicas):
+                n += rep.fault_log.dump_jsonl(args.fault_log,
+                                              source=f"replica{i}",
+                                              append=True)
+            print(f"[serve] fault log: {n} events -> {args.fault_log}")
         pool.close()
         return
 
@@ -310,6 +331,18 @@ def main() -> None:
         print(f"[serve] injected {args.inject} at visits "
               f"{sorted(inj.schedule.plan[args.inject])}; recovery log: "
               f"{recovery}")
+        if args.inject == "device_lost":
+            # the loss must degrade IN PLACE, not crash: a remesh event in
+            # the log and a TP degree strictly below the built mesh
+            assert any(e.action == "remesh" for e in engine.fault_log), \
+                "--inject device_lost: no remesh in the fault log"
+            assert engine.tp_degree < model_par, \
+                f"--inject device_lost: tp still {engine.tp_degree}"
+            print(f"[serve] remeshed tp {model_par}->{engine.tp_degree} "
+                  "(degraded mode, verified replay)")
+    if args.fault_log:
+        n = engine.fault_log.dump_jsonl(args.fault_log, source="engine")
+        print(f"[serve] fault log: {n} events -> {args.fault_log}")
     if args.ci:
         assert len(done) == args.requests, \
             f"CI smoke: {len(done)}/{args.requests} requests completed"

@@ -69,24 +69,54 @@ class StragglerMonitor:
                 s.ewma > med + self.sigma * floor]
 
 
-def plan_remesh(alive_devices: int, model_parallel: int,
-                pods: int = 1) -> Optional[Tuple[int, ...]]:
+def plan_remesh(alive_devices: int, model_parallel: int, pods: int = 1,
+                pod_alive: Optional[Tuple[int, ...]] = None
+                ) -> Optional[Tuple[int, ...]]:
     """Largest usable mesh after failures.
 
-    Keeps the TP degree fixed (weights are laid out for it) and shrinks DP:
-    usable = pods × data' × model with data' = ⌊alive/(pods·model)⌋.
-    Returns the new mesh shape or None if not even one TP group survives.
+    Keeps the TP degree fixed (weights are laid out for it) and shrinks DP.
+    Survivors are physically spread across pods — a TP group cannot straddle
+    the inter-pod boundary — so the factorization is per-pod: each pod
+    contributes ``⌊pod_alive/model⌋`` groups, and a rectangular multi-pod
+    mesh keeps the pods that still hold at least one group at the MINIMUM
+    surviving group count. ``pod_alive`` gives the exact per-pod survivor
+    counts; without it survivors are assumed evenly spread (remainder on the
+    leading pods). One surviving pod degrades to a single-pod (data, model)
+    mesh; zero returns None — not even one TP group survives anywhere.
     """
-    per_pod = alive_devices // pods
-    data = per_pod // model_parallel
-    if data < 1:
-        # degrade: drop to single pod before giving up
-        if pods > 1:
-            return plan_remesh(alive_devices, model_parallel, pods=1)
+    if pod_alive is None:
+        base, extra = divmod(alive_devices, pods)
+        pod_alive = tuple(base + (1 if p < extra else 0)
+                          for p in range(pods))
+    groups = [a // model_parallel for a in pod_alive]
+    usable = [g for g in groups if g >= 1]
+    if not usable:
         return None
-    if pods > 1:
-        return (pods, data, model_parallel)
-    return (data, model_parallel)
+    if len(pod_alive) > 1 and len(usable) > 1:
+        return (len(usable), min(usable), model_parallel)
+    return (max(groups), model_parallel)
+
+
+def plan_replica_remesh(alive_devices: int,
+                        model_parallel: int) -> Optional[int]:
+    """Largest degraded TP degree ONE replica can rebuild to after losing
+    devices from its mesh (serving remesh, DESIGN.md §10).
+
+    A replica's mesh is (data=1, model): on device loss the engine keeps
+    data pinned at 1 and walks the TP degree down from the current one.
+    Candidates are divisors of the original degree — the Megatron layout
+    re-splits evenly only at divisors — and each is accepted when
+    ``plan_remesh`` validates a (data, model') factorization over the
+    survivors. Returns the new degree (1 = unsharded), or None when no
+    device survives — the kill-and-requeue fallback."""
+    if alive_devices < 1:
+        return None
+    for tp in range(min(alive_devices, model_parallel), 0, -1):
+        if model_parallel % tp:
+            continue
+        if plan_remesh(alive_devices, tp) is not None:
+            return tp
+    return None
 
 
 class PreemptionGuard:

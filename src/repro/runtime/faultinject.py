@@ -22,7 +22,14 @@ Named sites (the serving fault surface, DESIGN.md §7):
                           driving the victim-eviction path;
   * ``sigterm``         — a preemption signal lands between serving ticks
                           (sets ``PreemptionGuard.requested``, exactly what
-                          the real SIGTERM handler does).
+                          the real SIGTERM handler does);
+  * ``device_lost``     — a device drops out of the engine's mesh between
+                          serving ticks (deterministically the highest
+                          device): the engine drains, consults
+                          ``plan_replica_remesh``, and rebuilds at the
+                          lower TP degree with verified replay — or raises
+                          ``ServingFault(site="device_lost")`` when nothing
+                          survives (the pool's kill-and-requeue fallback).
 
 Schedules are deterministic: explicit visit sets (``FaultSchedule.at``,
 ``FaultSchedule.once``) or a seeded Bernoulli plan materialized up front
@@ -43,7 +50,7 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 import numpy as np
 
 SITES = ("dispatch", "finish_timeout", "nan_logits", "pool_exhausted",
-         "sigterm")
+         "sigterm", "device_lost")
 
 
 class InjectedFault(RuntimeError):

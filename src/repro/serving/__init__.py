@@ -1,8 +1,10 @@
 from repro.serving.replica import PoolRequest, ReplicaPool
-from repro.serving.resilience import (Backoff, FaultEvent, Preempted,
+from repro.serving.resilience import (Backoff, FaultEvent, FaultLog,
+                                      LoadShedPolicy, PoolHealth, Preempted,
                                       ServingFault, VictimInfo, VictimPolicy)
 from repro.serving.server import Request, ServingEngine
 
-__all__ = ["Backoff", "FaultEvent", "PoolRequest", "Preempted", "ReplicaPool",
+__all__ = ["Backoff", "FaultEvent", "FaultLog", "LoadShedPolicy",
+           "PoolHealth", "PoolRequest", "Preempted", "ReplicaPool",
            "Request", "ServingEngine", "ServingFault", "VictimInfo",
            "VictimPolicy"]

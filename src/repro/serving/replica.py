@@ -17,6 +17,19 @@ replica already emitted against the record (decode is deterministic and the
 replicas share weights), so a migration costs recompute but never changes
 output. ``plan_remesh`` annotates each kill with the post-failure mesh the
 fleet could rebuild to.
+
+Elastic degraded mode (DESIGN.md §10): a ``device_lost`` fault inside a
+replica's engine REMESHES it in place — the engine drains, consults
+``plan_replica_remesh`` for the largest TP degree over its surviving
+devices, rebuilds, and replays its own requests with verification; the pool
+just observes the degree drop and records it. Only when no factorization
+remains does the engine's ``ServingFault(site="device_lost")`` fall back to
+kill-and-requeue above. Because a degraded pool serves below its built
+capacity, requests carry optional ``deadline_ticks`` (expired requests are
+SHED with a structured ``ServingFault(site="deadline")`` instead of waiting
+forever) and a ``LoadShedPolicy`` can bound the intake queue (rejection via
+``ServingFault(site="load_shed")``); ``pool.health`` surfaces the
+degradation state machine-readably.
 """
 from __future__ import annotations
 
@@ -27,7 +40,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.runtime.fault import StragglerMonitor, plan_remesh
-from repro.serving.resilience import FaultEvent, Preempted, ServingFault
+from repro.serving.resilience import (FaultEvent, FaultLog, LoadShedPolicy,
+                                      PoolHealth, Preempted, ServingFault)
 from repro.serving.server import Request, ServingEngine
 
 
@@ -50,6 +64,14 @@ class PoolRequest:
     accept_lens: List[int] = field(default_factory=list)
     done: bool = False
     migrations: int = 0
+    # degraded-mode serving: ``deadline_ticks`` pool ticks after
+    # ``submitted_tick`` an unfinished request is SHED (``failed`` set,
+    # ``fault`` carries the structured ServingFault) instead of queueing
+    # forever against capacity the pool no longer has
+    deadline_ticks: Optional[int] = None
+    submitted_tick: int = 0
+    failed: bool = False
+    fault: Optional[ServingFault] = None
 
 
 class ReplicaPool:
@@ -63,7 +85,9 @@ class ReplicaPool:
 
     def __init__(self, replicas: Sequence[ServingEngine],
                  monitor: Optional[StragglerMonitor] = None,
-                 evict_stragglers: bool = True):
+                 evict_stragglers: bool = True,
+                 shed: Optional[LoadShedPolicy] = None,
+                 fault_log_cap: int = 256):
         if not replicas:
             raise ValueError("ReplicaPool needs at least one replica")
         self.replicas: List[ServingEngine] = list(replicas)
@@ -71,19 +95,43 @@ class ReplicaPool:
         self.monitor = (monitor if monitor is not None
                         else StragglerMonitor())
         self.evict_stragglers = bool(evict_stragglers)
+        self.shed = shed if shed is not None else LoadShedPolicy()
         self.queue: List[PoolRequest] = []
         self.requests: Dict[int, PoolRequest] = {}
         self.completed: List[PoolRequest] = []
-        self.fault_log: List[FaultEvent] = []
+        self.failed: List[PoolRequest] = []     # deadline-shed requests
+        self.fault_log = FaultLog(cap=fault_log_cap)
         self._next_uid = 0
         self._tick = 0
+        # degradation tracking: as-built vs current per-replica TP degree
+        # (an in-engine remesh drops the current one), plus the last health
+        # verdict so state TRANSITIONS land in the fault log exactly once
+        self._built_tp = tuple(e.tp_degree for e in self.replicas)
+        self._tp_now = list(self._built_tp)
+        self._was_degraded = False
 
     # ----- intake / placement -----
     def submit(self, prompt, max_new_tokens: int = 32,
-               eos_token: Optional[int] = None) -> PoolRequest:
+               eos_token: Optional[int] = None,
+               deadline_ticks: Optional[int] = None) -> PoolRequest:
+        """Queue a request. ``deadline_ticks``: pool ticks this request may
+        wait+run before being shed. Raises ``ServingFault(site="load_shed")``
+        when the shed policy's queue bound rejects the intake (degraded pool
+        at capacity — the caller should retry later or elsewhere)."""
+        if not self.shed.admits(len(self.queue), self.degraded):
+            self.fault_log.append(FaultEvent(
+                site="load_shed", tick=self._tick, action="reject",
+                detail=f"queue={len(self.queue)} >= "
+                       f"{self.shed.max_queue} (degraded={self.degraded})"))
+            raise ServingFault(
+                "load_shed",
+                f"intake rejected: {len(self.queue)} queued >= bound "
+                f"{self.shed.max_queue} while degraded")
         pr = PoolRequest(uid=self._next_uid,
                          prompt=np.asarray(prompt, np.int32),
-                         max_new_tokens=max_new_tokens, eos_token=eos_token)
+                         max_new_tokens=max_new_tokens, eos_token=eos_token,
+                         deadline_ticks=deadline_ticks,
+                         submitted_tick=self._tick)
         self._next_uid += 1
         self.requests[pr.uid] = pr
         self.queue.append(pr)
@@ -91,6 +139,48 @@ class ReplicaPool:
 
     def live_replicas(self) -> List[int]:
         return [i for i, a in enumerate(self.alive) if a]
+
+    # ----- health / degradation -----
+    @property
+    def health(self) -> PoolHealth:
+        live = self.live_replicas()
+        tp_now = tuple(self._tp_now[i] for i in live)
+        built = tuple(self._built_tp[i] for i in live)
+        return PoolHealth(
+            replicas_total=len(self.replicas), replicas_live=len(live),
+            tp_degrees=tp_now, built_tp_degrees=built,
+            queued=len(self.queue),
+            degraded=(len(live) < len(self.replicas)
+                      or any(n < b for n, b in zip(tp_now, built))))
+
+    @property
+    def degraded(self) -> bool:
+        return self.health.degraded
+
+    def _note_health(self) -> None:
+        """Log degradation-state TRANSITIONS (not every tick's state)."""
+        h = self.health
+        if h.degraded != self._was_degraded:
+            self._was_degraded = h.degraded
+            self.fault_log.append(FaultEvent(
+                site="health", tick=self._tick,
+                action="degraded" if h.degraded else "recovered",
+                detail=f"live={h.replicas_live}/{h.replicas_total} "
+                       f"tp={list(h.tp_degrees)} built="
+                       f"{list(h.built_tp_degrees)} queued={h.queued}"))
+
+    def _note_remeshes(self) -> None:
+        """Record per-replica TP drops (an engine remeshed inside its own
+        ``step``) at pool level — the FaultEvent(action="remesh") the
+        acceptance tests look for rides on the engine's own log too."""
+        for i in self.live_replicas():
+            now = self.replicas[i].tp_degree
+            if now < self._tp_now[i]:
+                self.fault_log.append(FaultEvent(
+                    site="device_lost", tick=self._tick, action="remesh",
+                    detail=f"replica={i} tp {self._tp_now[i]}->{now} "
+                           f"(built {self._built_tp[i]})"))
+                self._tp_now[i] = now
 
     def _capacity(self, i: int) -> int:
         """Free slots minus admission backlog — the placement score."""
@@ -125,8 +215,7 @@ class ReplicaPool:
         pr.accept_lens = [int(x) for x in h.accept_lens]
 
     def _tp_degree(self) -> int:
-        shard = self.replicas[0].engine.shard
-        return shard.degree if shard is not None else 1
+        return self.replicas[0].tp_degree
 
     def kill_replica(self, i: int, reason: str = "killed",
                      detail: str = "") -> None:
@@ -186,6 +275,44 @@ class ReplicaPool:
         self.kill_replica(worst, reason="straggler",
                           detail=f"ewma={self.monitor.hosts[worst].ewma:.4f}")
 
+    # ----- deadlines (degraded-mode load shedding) -----
+    def _shed_expired(self, finished: List["PoolRequest"]) -> None:
+        """Shed unfinished requests past their deadline: queued ones drop
+        out of the queue, slotted ones cancel on their engine (the engine
+        drains its megatick first — a request the drain FINISHES made the
+        deadline after all and completes normally). A shed request is
+        terminal: ``failed`` with a structured ServingFault, never requeued."""
+        for pr in list(self.requests.values()):
+            if (pr.done or pr.failed or pr.deadline_ticks is None
+                    or self._tick - pr.submitted_tick < pr.deadline_ticks):
+                continue
+            if pr in self.queue:
+                self.queue.remove(pr)
+            elif pr.handle is not None and pr.replica is not None \
+                    and self.alive[pr.replica]:
+                self.replicas[pr.replica].cancel(pr.handle.uid)
+                if pr.handle.done:      # drained over the finish line
+                    self._snapshot_handle(pr)
+                    pr.done = True
+                    self.completed.append(pr)
+                    finished.append(pr)
+                    continue
+                self._snapshot_handle(pr)
+            pr.failed = True
+            pr.done = True
+            pr.fault = ServingFault(
+                "deadline",
+                f"uid={pr.uid} shed after {self._tick - pr.submitted_tick} "
+                f"ticks (deadline {pr.deadline_ticks}); "
+                f"progress={len(pr.output)}/{pr.max_new_tokens}")
+            pr.replica = None
+            pr.handle = None
+            self.failed.append(pr)
+            self.fault_log.append(FaultEvent(
+                site="deadline", tick=self._tick, action="shed",
+                detail=f"uid={pr.uid} progress={len(pr.output)} "
+                       f"deadline={pr.deadline_ticks}"))
+
     # ----- drive -----
     def step(self) -> List[PoolRequest]:
         """One pool tick: place queued work, step every live busy replica
@@ -208,6 +335,7 @@ class ReplicaPool:
                 self.kill_replica(i, reason=err.site, detail=str(err))
                 continue
             self.monitor.record(i, time.monotonic() - t0)
+        self._note_remeshes()
         finished: List[PoolRequest] = []
         for pr in self.requests.values():
             if pr.done or pr.handle is None or not pr.handle.done:
@@ -216,7 +344,9 @@ class ReplicaPool:
             pr.done = True
             self.completed.append(pr)
             finished.append(pr)
+        self._shed_expired(finished)
         self._maybe_evict_straggler()
+        self._note_health()
         self._assign()          # migrated work lands without an extra tick
         return finished
 

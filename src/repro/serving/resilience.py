@@ -18,15 +18,23 @@
     dispatch retries (exponential, capped attempts). Tests zero the base
     delay so retries are instant.
   * **fault log** — ``FaultEvent`` records every recovery action the
-    engine took (retry, eviction, sync fallback, checkpoint), so the
-    acceptance tests can assert not just that outputs are token-identical
-    but that the intended degradation path actually ran.
+    engine took (retry, eviction, sync fallback, checkpoint, remesh), held
+    in a ``FaultLog`` bounded ring so soak runs can't grow memory without
+    bound, with a JSONL export for post-mortems. Tests assert not just that
+    outputs are token-identical but that the intended degradation path
+    actually ran.
+  * **degraded-mode serving** — ``LoadShedPolicy`` bounds the admission
+    queue once remeshed capacity drops below demand (reject at intake
+    instead of queueing unboundedly), and ``PoolHealth`` is the
+    ``ReplicaPool``'s machine-readable degradation surface.
 """
 from __future__ import annotations
 
+import json
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional
+from typing import Deque, Iterable, Iterator, List, Optional, Tuple, Union
 
 
 class ServingFault(RuntimeError):
@@ -67,6 +75,104 @@ class FaultEvent:
     tick: int                   # engine tick when it happened
     action: str                 # "retry" | "evict" | "sync_fallback" | ...
     detail: str = ""
+
+
+class FaultLog:
+    """Bounded ring of ``FaultEvent``s with a list-compatible surface.
+
+    Engines append every recovery action here; the ring keeps only the last
+    ``cap`` events (a long soak run under a flaky fleet would otherwise grow
+    the log without bound) while ``total``/``dropped`` keep the true counts.
+    Iteration, ``len``, indexing, and truthiness behave like the plain list
+    the log used to be, so existing consumers (tests, the launcher's
+    recovery print) read it unchanged. ``dump_jsonl`` writes the retained
+    window as one JSON object per line — the machine-readable post-mortem
+    trail behind ``launch/serve.py --fault-log``."""
+
+    def __init__(self, cap: int = 256):
+        if cap < 1:
+            raise ValueError(f"FaultLog cap must be >= 1, got {cap}")
+        self.cap = int(cap)
+        self._events: Deque[FaultEvent] = deque(maxlen=self.cap)
+        self.total = 0              # events ever appended
+
+    @property
+    def dropped(self) -> int:
+        """Events evicted from the ring (oldest-first)."""
+        return self.total - len(self._events)
+
+    def append(self, event: FaultEvent) -> None:
+        self._events.append(event)
+        self.total += 1
+
+    def extend(self, events: Iterable[FaultEvent]) -> None:
+        for e in events:
+            self.append(e)
+
+    def __iter__(self) -> Iterator[FaultEvent]:
+        return iter(self._events)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def __bool__(self) -> bool:
+        return bool(self._events)
+
+    def __getitem__(self, i: Union[int, slice]):
+        return list(self._events)[i]
+
+    def dump_jsonl(self, path: str, source: str = "engine",
+                   append: bool = False) -> int:
+        """Write the retained events to ``path`` as JSONL. ``seq`` is the
+        event's global index (dropped events leave a visible gap at the
+        front); ``source`` labels the emitting engine/pool so one file can
+        hold a whole fleet's trail. Returns the number of lines written."""
+        base = self.dropped
+        with open(path, "a" if append else "w") as f:
+            for i, e in enumerate(self._events):
+                f.write(json.dumps({
+                    "seq": base + i, "source": source, "site": e.site,
+                    "tick": e.tick, "action": e.action,
+                    "detail": e.detail}) + "\n")
+        return len(self._events)
+
+
+@dataclass(frozen=True)
+class LoadShedPolicy:
+    """Queue bound for degraded-mode serving (DESIGN.md §10).
+
+    When a remesh (or a replica death) drops pool capacity below demand,
+    unbounded queueing just converts overload into unbounded latency — the
+    pool instead REJECTS intake (``ServingFault(site="load_shed")``) once
+    ``max_queue`` requests are already waiting. ``only_degraded`` (default)
+    applies the bound only while the pool is degraded; set it False to bound
+    the queue unconditionally. ``max_queue=None`` never sheds."""
+
+    max_queue: Optional[int] = None
+    only_degraded: bool = True
+
+    def admits(self, queued: int, degraded: bool) -> bool:
+        if self.max_queue is None:
+            return True
+        if self.only_degraded and not degraded:
+            return True
+        return queued < self.max_queue
+
+
+@dataclass(frozen=True)
+class PoolHealth:
+    """``ReplicaPool.health``: the pool's degradation state, one snapshot.
+
+    ``degraded`` is True when any replica is dead OR any live replica runs
+    below its as-built TP degree (it remeshed after a device loss) — the
+    signal ``LoadShedPolicy`` keys on."""
+
+    replicas_total: int
+    replicas_live: int
+    tp_degrees: Tuple[int, ...]         # live replicas' CURRENT degrees
+    built_tp_degrees: Tuple[int, ...]   # same replicas' as-built degrees
+    queued: int
+    degraded: bool
 
 
 @dataclass(frozen=True)

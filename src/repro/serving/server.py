@@ -85,9 +85,10 @@ from repro.api.scheduler import ChunkedPrefillScheduler
 from repro.checkpoint import CheckpointManager
 from repro.models.model import Model, build_model
 from repro.runtime import faultinject
-from repro.runtime.fault import PreemptionGuard
-from repro.serving.resilience import (Backoff, FaultEvent, Preempted,
-                                      ServingFault, VictimInfo, VictimPolicy)
+from repro.runtime.fault import PreemptionGuard, plan_replica_remesh
+from repro.serving.resilience import (Backoff, FaultEvent, FaultLog,
+                                      Preempted, ServingFault, VictimInfo,
+                                      VictimPolicy)
 
 
 @dataclass
@@ -131,7 +132,8 @@ class ServingEngine:
                  backoff: Optional[Backoff] = None,
                  cooldown_ticks: int = 8,
                  quant=None,
-                 mesh=None, policy: str = "tp_dp"):
+                 mesh=None, policy: str = "tp_dp",
+                 fault_log_cap: int = 256):
         spec = CacheSpec.resolve(cache, model.run.serve)
         if page_size is not None:
             # the override obeys the same rule ServeConfig validates at
@@ -174,6 +176,13 @@ class ServingEngine:
         self.engine = Engine.create(model, params, sw=sw,
                                     strategy=self.strategy, quant=quant,
                                     mesh=mesh, policy=policy)
+        # remesh sources (DESIGN.md §10): ``Engine.create`` pins sharded
+        # copies under the mesh's specs but never mutates the host pytrees,
+        # so these references are all a device-loss rebuild needs — no
+        # checkpoint round-trip
+        self._src_params, self._src_sw = params, sw
+        self._src_quant, self._src_policy = quant, policy
+        self._src_seed = prng_seed
         B = self.serve_cfg.max_batch
         S = self.serve_cfg.max_seq_len
         self.B, self.S = B, S
@@ -215,8 +224,14 @@ class ServingEngine:
         self.cooldown_ticks = int(cooldown_ticks)
         self._sync_cooldown = 0         # ticks left on the sync fallback path
         self._tick = 0
-        self.fault_log: List[FaultEvent] = []
+        self.fault_log = FaultLog(cap=fault_log_cap)
         self.completed: List[Request] = []   # finish order, survives restore
+
+    @property
+    def tp_degree(self) -> int:
+        """Current tensor-parallel degree (1 = unsharded; drops on remesh)."""
+        shard = self.engine.shard
+        return shard.degree if shard is not None else 1
 
     # ----- request intake -----
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
@@ -521,6 +536,118 @@ class ServingEngine:
         self._evict(row, self.slots[row], reason="pool_pressure")
         self.scheduler.deferred_ticks = 0
 
+    # ----- elastic remesh on device loss (DESIGN.md §10) -----
+    def remesh(self, mesh, site: str = "device_lost",
+               detail: str = "") -> None:
+        """Rebuild the decode stack on ``mesh`` (None = unsharded) and
+        re-admit every unfinished request with verified replay.
+
+        Order matters: the in-flight megatick drains FIRST so its tokens
+        land in each request's record before ``replay_total`` freezes (the
+        eviction invariant); then the chunked admission aborts back to the
+        queue; then a fresh ``Engine`` re-``device_put``s the HOST
+        params/spec-weights under the new mesh's Megatron specs, a fresh
+        session re-shards the paged pools (``shard_state`` at alloc) and
+        re-traces step/megatick for the new ``ShardCtx``. Re-admitted
+        requests replay-verify their recorded tokens (PR 6/9: decode is
+        deterministic and sharded ≡ unsharded, so the degraded engine is
+        token-identical to the healthy run); stats recorded pre-remesh stay
+        on the request, and replay ticks contribute none — the finished
+        stats match an uninterrupted run exactly."""
+        finished: List[Request] = []
+        self._drain(finished)
+        self.completed.extend(finished)
+        self.scheduler.abort_active()
+        chunk = self.scheduler.chunk_tokens
+        pending: List[Request] = [
+            req for req in self.slots if req is not None and not req.done]
+        pending.extend(self._inflight[uid] for uid in self.scheduler.queued)
+        # admission order on the rebuilt engine is uid order — deterministic
+        # regardless of which rows happened to be slotted at the loss
+        pending.sort(key=lambda r: r.uid)
+        old_tp = self.tp_degree
+        self.engine = Engine.create(self.model, self._src_params,
+                                    sw=self._src_sw, strategy=self.strategy,
+                                    quant=self._src_quant, mesh=mesh,
+                                    policy=self._src_policy)
+        self.session = self.engine.new_session(batch=self.B, max_seq=self.S,
+                                               prng_seed=self._src_seed,
+                                               cache=self.cache_spec)
+        self.scheduler = ChunkedPrefillScheduler(self.session,
+                                                 chunk_tokens=chunk)
+        self.slots = [None] * self.B
+        self._inflight = {}
+        self._handle = None
+        for req in pending:
+            req.replay_total = len(req.output)
+            req.replayed = 0
+            self._inflight[req.uid] = req
+            self.scheduler.submit(req.uid, req.prompt,
+                                  max_new_tokens=req.max_new_tokens,
+                                  eos_token=req.eos_token)
+        self.fault_log.append(FaultEvent(
+            site=site, tick=self._tick, action="remesh",
+            detail=f"tp {old_tp}->{self.tp_degree} "
+                   f"readmitted={len(pending)}"
+                   + (f"; {detail}" if detail else "")))
+
+    def _maybe_device_loss(self) -> None:
+        """The ``device_lost`` injection site: deterministically drop the
+        HIGHEST device from this engine's mesh between ticks. With a valid
+        factorization over the survivors (``plan_replica_remesh``) the
+        engine rebuilds in place at the lower TP degree; with none (already
+        unsharded, or no device left) it drains what it can and surfaces
+        ``ServingFault(site="device_lost")`` — standalone that's terminal,
+        under a ``ReplicaPool`` it's the kill-and-requeue fallback."""
+        if not faultinject.fire("device_lost"):
+            return
+        mesh = self.engine.mesh
+        devices = (list(mesh.devices.flat)
+                   if mesh is not None and self.engine.shard is not None
+                   else [])
+        lost = devices[-1] if devices else None
+        surviving = devices[:-1]
+        new_tp = plan_replica_remesh(len(surviving), self.tp_degree)
+        if new_tp is None:
+            self.drain()
+            self.fault_log.append(FaultEvent(
+                site="device_lost", tick=self._tick, action="give_up",
+                detail=f"no factorization over {len(surviving)} surviving "
+                       f"devices (tp={self.tp_degree})"))
+            raise ServingFault(
+                "device_lost",
+                f"device lost with no valid remesh (tp={self.tp_degree}, "
+                f"surviving={len(surviving)})")
+        if new_tp > 1:
+            from repro.sharding.compat import make_mesh
+            new_mesh = make_mesh((1, new_tp), ("data", "model"),
+                                 devices=surviving[:new_tp])
+        else:
+            new_mesh = None
+        self.remesh(new_mesh, detail=f"lost={lost}")
+
+    def cancel(self, uid: int) -> bool:
+        """Withdraw an unfinished request (deadline shedding): drop it from
+        the queue/admission, or free its slot and pages. The in-flight
+        megatick drains first so a slotted cancel retires a coherent row —
+        if that drain FINISHES the request, it stays finished (it made the
+        deadline after all). Returns True when the uid was found live."""
+        if uid in self._inflight:
+            if uid in self.scheduler.admitting:
+                self.scheduler.abort_active()
+            self.scheduler.remove(uid)
+            del self._inflight[uid]
+            return True
+        for row in range(self.B):
+            req = self.slots[row]
+            if req is not None and req.uid == uid and not req.done:
+                self.drain()
+                if self.slots[row] is req and not req.done:
+                    self.slots[row] = None
+                    self.session.retire_row(row)
+                return True
+        return False
+
     # ----- checkpoint / restore (SIGTERM preemption) -----
     def _req_meta(self, req: Request) -> dict:
         return {"uid": int(req.uid),
@@ -654,6 +781,7 @@ class ServingEngine:
         the blocking path. During a recovery cooldown the pipeline is
         suspended and ticks run synchronously."""
         self._maybe_preempt()
+        self._maybe_device_loss()
         self._tick += 1
         finished: List[Request] = []
         async_enabled = self.async_ticks and self._sync_cooldown == 0

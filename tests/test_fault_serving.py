@@ -109,7 +109,11 @@ def test_every_site_fires_and_tokens_match_fault_free(setup, tmp_path):
             pytest.fail("engine never ran to completion")
         fault_log.extend(se.fault_log)
         se.close()
-        assert inj.fired_sites() == frozenset(faultinject.SITES), \
+        # every ENGINE-RECOVERABLE site on an unsharded engine; device_lost
+        # needs a TP mesh to degrade onto and has its own acceptance suite
+        # (tests/test_remesh.py, forced host devices)
+        assert inj.fired_sites() == \
+            frozenset(faultinject.SITES) - {"device_lost"}, \
             f"sites that fired: {sorted(inj.fired_sites())}"
 
     assert _outputs(se) == _outputs(ref)
@@ -252,7 +256,11 @@ def test_scheduler_abort_active_requeues_at_front(setup):
 
 
 # ---------------- injection sweep (one site at a time) ----------------
-@pytest.mark.parametrize("site", faultinject.SITES)
+# device_lost is excluded: recovery is a REMESH, which needs a TP mesh over
+# forced host devices — covered end-to-end in tests/test_remesh.py; the
+# no-survivor (unsharded) behavior is pinned below.
+@pytest.mark.parametrize(
+    "site", [s for s in faultinject.SITES if s != "device_lost"])
 def test_single_site_injection_recovers(setup, tmp_path, site):
     run, m, params, sw = setup
     prompts = _prompts(run)

@@ -12,7 +12,8 @@ import signal
 import pytest
 
 from repro.runtime import faultinject
-from repro.runtime.fault import PreemptionGuard, StragglerMonitor, plan_remesh
+from repro.runtime.fault import (PreemptionGuard, StragglerMonitor,
+                                 plan_remesh, plan_replica_remesh)
 from repro.runtime.faultinject import (FaultInjector, FaultSchedule,
                                        InjectedFault)
 
@@ -73,14 +74,42 @@ def test_plan_remesh_shrinks_data_parallel():
 
 
 def test_plan_remesh_multi_pod_ladder():
+    """The full multi-pod degradation ladder. Survivors are physically
+    spread across pods (a TP group cannot straddle the pod boundary), so 12
+    alive over 2 pods is 6+6 — no pod holds a whole TP-8 group, and the old
+    recursion that retried the SAME 12 devices as one imaginary pod was a
+    bug, not a fallback."""
     assert plan_remesh(64, 8, pods=4) == (4, 2, 8)
-    # pods can't each hold a TP group: degrade to single pod, then give up
-    assert plan_remesh(12, 8, pods=2) == (1, 8)
+    # uneven losses: rectangular mesh at the MINIMUM surviving group count
+    assert plan_remesh(64, 8, pods=4, pod_alive=(16, 16, 16, 9)) == (4, 1, 8)
+    # one pod lost entirely: the usable pods carry on
+    assert plan_remesh(48, 8, pods=4, pod_alive=(16, 16, 16, 0)) == (3, 2, 8)
+    # a single pod with >= 1 group left degrades to a single-pod mesh
+    assert plan_remesh(12, 8, pods=2, pod_alive=(9, 3)) == (1, 8)
+    # evenly-spread 12 over 2 pods is 6+6: no pod holds a TP-8 group
+    assert plan_remesh(12, 8, pods=2) is None
     assert plan_remesh(4, 8, pods=2) is None
 
 
 def test_plan_remesh_none_when_tp_group_lost():
     assert plan_remesh(7, 8) is None
+    # degenerate: fewer alive devices than the TP degree in every pod
+    assert plan_remesh(14, 8, pods=2) is None       # 7+7
+    # 8+7: exactly one pod still holds a group -> single-pod (1, 8)
+    assert plan_remesh(15, 8, pods=2) == (1, 8)
+
+
+def test_plan_replica_remesh_tp_ladder():
+    """Serving remesh (one replica, data pinned at 1): the largest DIVISOR
+    of the built TP degree that fits the survivors, down to unsharded."""
+    assert plan_replica_remesh(3, 4) == 2           # 4 -> 2 (3 alive)
+    assert plan_replica_remesh(2, 4) == 2
+    assert plan_replica_remesh(1, 4) == 1           # down to unsharded
+    assert plan_replica_remesh(1, 2) == 1
+    assert plan_replica_remesh(4, 4) == 4           # nothing actually lost
+    assert plan_replica_remesh(5, 6) == 3           # divisors only: not 5
+    assert plan_replica_remesh(0, 2) is None        # no device left
+    assert plan_replica_remesh(0, 1) is None
 
 
 # ---------------- PreemptionGuard ----------------
